@@ -1,0 +1,73 @@
+"""End-to-end training driver: synthetic-data LM training with the full
+substrate (pipeline, AdamW, async checkpointing, fault-tolerant trainer,
+MXFP4-STE quantized training).
+
+Presets:
+  tiny  (~2M params, CPU-friendly smoke: default here)
+  100m  (~100M params — the brief's reference run; intended for TPU, works
+         on CPU but slowly)
+
+Run:  PYTHONPATH=src python examples/train_tinylm.py --steps 60
+"""
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro import configs as C
+from repro.layers.common import RunCtx, ShardingCtx
+from repro.optim import adamw
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+PRESETS = {
+    "tiny": dict(n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+                 head_dim=32, d_ff=384, vocab_size=512, window=64),
+    "100m": dict(n_layers=10, d_model=640, n_heads=10, n_kv_heads=5,
+                 head_dim=64, d_ff=1792, vocab_size=32000, window=1024),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=list(PRESETS))
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt", default="/tmp/repro_tinylm")
+    ap.add_argument("--quant", default="mxfp4_ste",
+                    choices=["none", "mxfp4_ste"])
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(C.ARCHS["h2o-danube-1.8b"], **PRESETS[args.preset])
+    shape = C.Shape(seq=args.seq, batch=args.batch, kind="train")
+    n_params = sum(
+        x.size for x in jax.tree.leaves(
+            jax.eval_shape(
+                lambda: __import__("repro.models.lm", fromlist=["lm"])
+                .init_model(jax.random.PRNGKey(0), cfg)[0]
+            )
+        )
+    )
+    print(f"arch={cfg.name} preset={args.preset} params={n_params/1e6:.1f}M "
+          f"quant={args.quant}")
+
+    ctx = RunCtx(shd=ShardingCtx(), quant=args.quant, dense_attn_max=512)
+    tcfg = TrainerConfig(total_steps=args.steps, ckpt_every=20,
+                         ckpt_dir=args.ckpt,
+                         log_path=args.ckpt + ".metrics.jsonl")
+    trainer = Trainer(cfg, shape, tcfg, ctx=ctx,
+                      opt_cfg=adamw.AdamWConfig(lr=1e-3, warmup_steps=20,
+                                                total_steps=args.steps))
+    result = trainer.run()
+    losses = result["losses"]
+    print(f"steps {trainer.start_step}->{result['final_step']}  "
+          f"loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+    print(f"slow steps flagged: {len(result['slow_steps'])}")
+    assert losses[-1] < losses[0], "loss must decrease"
+    print("ok: loss decreased; checkpoint committed at",
+          trainer.ckpt.latest_step())
+
+
+if __name__ == "__main__":
+    main()

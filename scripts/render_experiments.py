@@ -1,0 +1,159 @@
+"""Render EXPERIMENTS.md from dryrun/*.json + dryrun/perf_log.json."""
+
+import json
+import os
+
+HEAD = """# EXPERIMENTS
+
+All dry-runs and rooflines target TPU v5e-class hardware (197 TFLOP/s bf16,
+16 GB HBM @ 819 GB/s, ~50 GB/s/link ICI per chip); this container is
+CPU-only, so `.lower().compile()` artifacts are the measurement substrate.
+
+Roofline terms come from **per-block compiles** (trip-count exact — XLA's
+cost analysis counts a `lax.scan` body once, see
+`src/repro/distributed/blockwise.py`); the full-model compile provides the
+existence + memory proof below. Collective wire bytes use a ring model
+over the post-SPMD HLO collectives. MODEL_FLOPS = 6·N·D (train) or
+2·N_active·D (serve).
+
+Skipped cells (per assignment rules, DESIGN.md §4):
+{skips}
+
+## §Dry-run — full-model compile, every cell x both meshes
+
+Every (arch x applicable shape) lowered AND compiled on the 16x16
+single-pod mesh and the 2x16x16 multi-pod mesh (512 host devices; the
+multi-pod pass proves the "pod" axis shards). args/temp = per-device
+`memory_analysis()`.
+
+"""
+
+
+def fmt_table(rows, multi=False):
+    out = [
+        "| arch | shape | compile s | args GiB/dev | temp GiB/dev | fits 16GB |",
+        "|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if "error" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | ERROR {r['error']} | | | |")
+            continue
+        m = r["memory"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compile_s']:.0f} "
+            f"| {m['argument_bytes']/2**30:.2f} | {m['temp_bytes']/2**30:.2f} "
+            f"| {'yes' if m['fits_16GB'] else 'NO'} |"
+        )
+    return "\n".join(out)
+
+
+def fmt_roofline(rows):
+    out = [
+        "| arch | shape | t_compute s | t_memory s | t_collective s | dominant "
+        "| roofline frac | MODEL/HLO flops | k_micro |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if "error" in r:
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3f} "
+            f"| {r['t_memory_s']:.3f} | {r['t_collective_s']:.3f} "
+            f"| **{r['dominant']}** | {r['roofline_fraction']:.3f} "
+            f"| {r['useful_flops_ratio']:.2f} | {r.get('k_micro', 1)} |"
+        )
+    return "\n".join(out)
+
+
+def main():
+    single = json.load(open("dryrun/single_pod.json"))
+    multi = json.load(open("dryrun/multi_pod.json"))
+    from repro import configs as C
+
+    skips = "\n".join(
+        f"  - {a} x {s}: {why}" for a, s, why in C.skipped_cells()
+    )
+    parts = [HEAD.format(skips=skips)]
+    parts.append("### Single-pod (16x16 = 256 chips)\n")
+    parts.append(fmt_table(single))
+    parts.append("\n### Multi-pod (2x16x16 = 512 chips)\n")
+    parts.append(fmt_table(multi))
+    ok_s = sum(1 for r in single if "error" not in r)
+    ok_m = sum(1 for r in multi if "error" not in r)
+    parts.append(
+        f"\n**{ok_s}/{len(single)} single-pod and {ok_m}/{len(multi)} "
+        "multi-pod cells compile.** Cells that exceed 16 GB/device are "
+        "§Perf targets (see below).\n"
+    )
+    parts.append("\n## §Roofline — per (arch x shape), single-pod\n")
+    parts.append(
+        "Per-device seconds per step. One-line bottleneck notes follow "
+        "the table.\n"
+    )
+    parts.append(fmt_roofline(single))
+
+    notes_path = "dryrun/roofline_notes.md"
+    if os.path.exists(notes_path):
+        parts.append("\n" + open(notes_path).read())
+
+    # optimized (beyond-paper) re-measurements vs the paper-faithful base
+    opt = []
+    for f in ("dryrun/single_pod_optimized.json",
+              "dryrun/single_pod_optimized2.json"):
+        if os.path.exists(f):
+            opt.extend(json.load(open(f)))
+    if opt:
+        latest = {}
+        for r in opt:
+            if "error" not in r:
+                latest[(r["arch"], r["shape"])] = r
+        base = {(r["arch"], r["shape"]): r for r in single if "error" not in r}
+        parts.append(
+            "\n## §Roofline (optimized) — after the §Perf iterations\n\n"
+            "Paper-faithful baselines above; the same cells after the "
+            "beyond-paper optimizations (grouped shard-local MoE dispatch, "
+            "step-boundary weight quant / bf16 FSDP gathers, chunkwise "
+            "mLSTM, bf16 packed dequant, stacked-weight MXFP4 packing):\n"
+        )
+        hdr = ("| arch | shape | t_compute s | t_memory s (was) | "
+               "t_collective s (was) | frac (was) |")
+        parts.append(hdr + "\n|---|---|---|---|---|---|")
+        for (a, s), r in sorted(latest.items()):
+            b = base.get((a, s))
+            if not b:
+                continue
+            parts.append(
+                f"| {a} | {s} | {r['t_compute_s']:.3f} "
+                f"| {r['t_memory_s']:.3f} ({b['t_memory_s']:.3f}) "
+                f"| {r['t_collective_s']:.3f} ({b['t_collective_s']:.3f}) "
+                f"| {r['roofline_fraction']:.4f} "
+                f"({b['roofline_fraction']:.4f}) |"
+            )
+        parts.append("")
+    mopt = "dryrun/multi_pod_optimized.json"
+    if os.path.exists(mopt):
+        rows = [r for r in json.load(open(mopt)) if "error" not in r]
+        if rows:
+            parts.append("\nMulti-pod MoE cells re-verified after the MoE "
+                         "fixes (all compile):\n")
+            parts.append(fmt_table(rows))
+
+    perf_path = "dryrun/perf_log.json"
+    parts.append("\n## §Perf — hypothesis -> change -> measure log\n")
+    if os.path.exists(perf_path):
+        for e in json.load(open(perf_path)):
+            parts.append(
+                f"### {e['cell']} — iteration {e['iter']}: {e['title']}\n\n"
+                f"- **Hypothesis**: {e['hypothesis']}\n"
+                f"- **Change**: {e['change']}\n"
+                f"- **Before**: {e['before']}\n"
+                f"- **After**: {e['after']}\n"
+                f"- **Verdict**: {e['verdict']}\n"
+            )
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write("\n".join(parts) + "\n")
+    print("wrote EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,183 @@
+"""Architecture registry, input-shape registry, reduced (smoke) configs,
+and input-spec builders for every (arch x shape) cell."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm import ArchConfig
+
+from repro.configs import (  # noqa: E402
+    gemma3_1b,
+    h2o_danube_1_8b,
+    hubert_xlarge,
+    mixtral_8x22b,
+    nemotron4_15b,
+    qwen2_vl_7b,
+    qwen3_moe_235b,
+    starcoder2_7b,
+    xlstm_125m,
+    zamba2_1_2b,
+)
+
+ARCHS: dict[str, ArchConfig] = {
+    c.CONFIG.name: c.CONFIG
+    for c in (
+        h2o_danube_1_8b,
+        starcoder2_7b,
+        gemma3_1b,
+        nemotron4_15b,
+        mixtral_8x22b,
+        qwen3_moe_235b,
+        hubert_xlarge,
+        zamba2_1_2b,
+        xlstm_125m,
+        qwen2_vl_7b,
+    )
+}
+
+# Paper's own short-sequence encoder workloads (hwmodel / accuracy benches).
+PAPER_ARCHS: dict[str, ArchConfig] = {
+    "vit-b16": ArchConfig(
+        name="vit-b16", family="audio", n_layers=12, d_model=768, n_heads=12,
+        n_kv_heads=12, d_ff=3072, vocab_size=1000, causal=False,
+        ffn_kind="gelu", norm="layernorm", use_bias=True, frontend="audio",
+        frontend_dim=768, supports_decode=False,
+    ),
+    "vit-l32": ArchConfig(
+        name="vit-l32", family="audio", n_layers=24, d_model=1024, n_heads=16,
+        n_kv_heads=16, d_ff=4096, vocab_size=1000, causal=False,
+        ffn_kind="gelu", norm="layernorm", use_bias=True, frontend="audio",
+        frontend_dim=768, supports_decode=False,
+    ),
+    "bert-base": ArchConfig(
+        name="bert-base", family="audio", n_layers=12, d_model=768, n_heads=12,
+        n_kv_heads=12, d_ff=3072, vocab_size=30522, causal=False,
+        ffn_kind="gelu", norm="layernorm", use_bias=True, frontend="audio",
+        frontend_dim=768, supports_decode=False,
+    ),
+}
+
+
+class Shape(NamedTuple):
+    seq: int
+    batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: dict[str, Shape] = {
+    "train_4k": Shape(4096, 256, "train"),
+    "prefill_32k": Shape(32768, 32, "prefill"),
+    "decode_32k": Shape(32768, 128, "decode"),
+    "long_500k": Shape(524288, 1, "decode"),
+}
+
+
+def applicable_shapes(cfg: ArchConfig) -> list[str]:
+    """Which of the 4 assigned shapes run for this arch (DESIGN.md §4)."""
+    out = ["train_4k", "prefill_32k"]
+    if cfg.supports_decode:
+        out.append("decode_32k")
+        if cfg.subquadratic:
+            out.append("long_500k")
+    return out
+
+
+def all_cells() -> list[tuple[str, str]]:
+    return [(a, s) for a, c in ARCHS.items() for s in applicable_shapes(c)]
+
+
+def skipped_cells() -> list[tuple[str, str, str]]:
+    out = []
+    for a, c in ARCHS.items():
+        for s in SHAPES:
+            if s in applicable_shapes(c):
+                continue
+            why = (
+                "encoder-only (no decode step)"
+                if not c.supports_decode
+                else "pure full attention (long_500k needs sub-quadratic)"
+            )
+            out.append((a, s, why))
+    return out
+
+
+# ----------------------------------------------------------- reduced cfgs
+
+def tiny(cfg: ArchConfig, seq: int = 32) -> ArchConfig:
+    """Reduced same-family config for CPU smoke tests: keeps the block
+    pattern representative (>=1 global layer, >=1 shared block, >=1 sLSTM,
+    few experts) but shrinks all dims."""
+    over: dict = dict(
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 2) if cfg.n_kv_heads < cfg.n_heads else 4,
+        head_dim=16,
+        d_ff=96 if cfg.d_ff else 0,
+        vocab_size=128,
+        window=min(cfg.window, 16),
+    )
+    if cfg.attn_pattern == "local_global":
+        over.update(n_layers=2 * (cfg.lg_ratio + 1), lg_ratio=cfg.lg_ratio)
+    elif cfg.family == "hybrid":
+        over.update(n_layers=5, shared_attn_every=2, ssm_state=16,
+                    ssm_head_dim=16)
+    elif cfg.family == "ssm":
+        over.update(n_layers=4, slstm_at=(1,))
+    else:
+        over.update(n_layers=2)
+    if cfg.n_experts:
+        over.update(n_experts=4, top_k=min(cfg.top_k, 2))
+    if cfg.frontend != "none":
+        over.update(frontend_dim=24, n_vis_tokens=8)
+    return dataclasses.replace(cfg, **over)
+
+
+# ------------------------------------------------------------ input specs
+
+def input_specs(cfg: ArchConfig, shape: str | Shape, multi_pod: bool = False):
+    """ShapeDtypeStruct stand-ins for every model input of this cell
+    (weak-type-correct, shardable, no device allocation).
+
+    train/prefill -> kwargs for train_step/prefill_step;
+    decode        -> kwargs for serve_step (ids, pos, caches built
+                     separately via models.lm.init_cache under eval_shape).
+    """
+    sh = SHAPES[shape] if isinstance(shape, str) else shape
+    b, s = sh.batch, sh.seq
+    f32, i32 = jnp.float32, jnp.int32
+    sds = jax.ShapeDtypeStruct
+    if sh.kind == "decode":
+        return {"ids": sds((b, 1), i32), "pos": sds((), i32)}
+    batch: dict = {}
+    if cfg.frontend == "audio":
+        batch["emb"] = sds((b, s, cfg.frontend_dim), f32)
+    else:
+        batch["ids"] = sds((b, s), i32)
+    if cfg.frontend == "vision":
+        batch["vis_emb"] = sds((b, cfg.n_vis_tokens, cfg.frontend_dim), f32)
+    if sh.kind == "train":
+        batch["labels"] = sds((b, s), i32)
+        batch["loss_mask"] = sds((b, s), f32)
+    return batch
+
+
+def concrete_inputs(cfg: ArchConfig, shape: Shape, seed: int = 0):
+    """Small concrete arrays matching input_specs (smoke tests)."""
+    rng = jax.random.PRNGKey(seed)
+    specs = input_specs(cfg, shape)
+    out = {}
+    for k, v in specs.items():
+        rng, sub = jax.random.split(rng)
+        if v.dtype == jnp.int32:
+            hi = cfg.vocab_size if k in ("ids", "labels") else 2**30
+            out[k] = jax.random.randint(sub, v.shape, 0, min(hi, 2**30), jnp.int32)
+        else:
+            out[k] = jax.random.normal(sub, v.shape, v.dtype)
+    if "loss_mask" in out:
+        out["loss_mask"] = jnp.ones(specs["loss_mask"].shape, jnp.float32)
+    return out

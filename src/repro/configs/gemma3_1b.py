@@ -1,0 +1,12 @@
+"""gemma3-1b [hf:google/gemma-3-1b-pt]: 5:1 local:global, kv=1, 262k vocab."""
+from repro.models.lm import ArchConfig
+
+CONFIG = ArchConfig(
+    name="gemma3-1b", family="dense",
+    n_layers=26, d_model=1152, n_heads=4, n_kv_heads=1, head_dim=256,
+    d_ff=6912, vocab_size=262144,
+    attn_pattern="local_global", lg_ratio=5, window=512,
+    rope_theta=1e4, rope_theta_global=1e6, qk_norm=True,
+    ffn_kind="geglu", norm="rmsnorm", tie_embeddings=True,
+    subquadratic=True,  # 5:1 local; the few global layers have kv=1
+)

@@ -1,0 +1,11 @@
+"""h2o-danube-1.8b [arXiv:2401.16818]: llama+mistral mix with SWA."""
+from repro.models.lm import ArchConfig
+
+CONFIG = ArchConfig(
+    name="h2o-danube-1.8b", family="dense",
+    n_layers=24, d_model=2560, n_heads=32, n_kv_heads=8, head_dim=80,
+    d_ff=6912, vocab_size=32000,
+    attn_pattern="swa", window=4096, rope_theta=1e4,
+    ffn_kind="swiglu", norm="rmsnorm",
+    subquadratic=True,  # sliding window => bounded KV; runs long_500k
+)

@@ -1,0 +1,14 @@
+"""hubert-xlarge [arXiv:2106.07447]: encoder-only audio transformer.
+Modality frontend is a STUB: inputs are precomputed frame embeddings."""
+from repro.models.lm import ArchConfig
+
+CONFIG = ArchConfig(
+    name="hubert-xlarge", family="audio",
+    n_layers=48, d_model=1280, n_heads=16, n_kv_heads=16, head_dim=80,
+    d_ff=5120, vocab_size=504,
+    causal=False, attn_pattern="full",
+    ffn_kind="gelu", norm="layernorm", use_bias=True,
+    frontend="audio", frontend_dim=512,
+    supports_decode=False,  # encoder-only: decode_32k & long_500k skipped
+    subquadratic=False,
+)

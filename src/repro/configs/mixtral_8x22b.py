@@ -1,0 +1,12 @@
+"""mixtral-8x22b [arXiv:2401.04088]: 8 experts top-2, SWA."""
+from repro.models.lm import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mixtral-8x22b", family="moe",
+    n_layers=56, d_model=6144, n_heads=48, n_kv_heads=8, head_dim=128,
+    d_ff=16384, vocab_size=32768,
+    n_experts=8, top_k=2, moe_shard="tp",  # 8 experts < 16-way model axis
+    attn_pattern="swa", window=4096, rope_theta=1e6,
+    ffn_kind="swiglu", norm="rmsnorm",
+    subquadratic=True,
+)

@@ -1,0 +1,11 @@
+"""nemotron-4-15b [arXiv:2402.16819]: GQA, squared-ReLU MLP."""
+from repro.models.lm import ArchConfig
+
+CONFIG = ArchConfig(
+    name="nemotron-4-15b", family="dense",
+    n_layers=32, d_model=6144, n_heads=48, n_kv_heads=8, head_dim=128,
+    d_ff=24576, vocab_size=256000,
+    attn_pattern="full", rope_theta=1e4,
+    ffn_kind="relu2", norm="layernorm",
+    subquadratic=False,  # full attention => long_500k skipped
+)

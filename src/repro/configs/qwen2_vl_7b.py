@@ -1,0 +1,13 @@
+"""qwen2-vl-7b [arXiv:2409.12191]: M-RoPE decoder; vision frontend STUB
+(input_specs provides precomputed patch embeddings)."""
+from repro.models.lm import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-vl-7b", family="vlm",
+    n_layers=28, d_model=3584, n_heads=28, n_kv_heads=4, head_dim=128,
+    d_ff=18944, vocab_size=152064,
+    attn_pattern="full", rope_theta=1e6, mrope=True,
+    ffn_kind="swiglu", norm="rmsnorm",
+    frontend="vision", frontend_dim=1176, n_vis_tokens=64,
+    subquadratic=False,  # full attention => long_500k skipped
+)

@@ -1,0 +1,12 @@
+"""qwen3-moe-235b-a22b [hf:Qwen/Qwen3-30B-A3B family]: 128e top-8."""
+from repro.models.lm import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen3-moe-235b-a22b", family="moe",
+    n_layers=94, d_model=4096, n_heads=64, n_kv_heads=4, head_dim=128,
+    d_ff=1536, vocab_size=151936,
+    n_experts=128, top_k=8, moe_shard="ep",  # 8 experts per device @ TP16
+    attn_pattern="full", rope_theta=1e6, qk_norm=True,
+    ffn_kind="swiglu", norm="rmsnorm",
+    subquadratic=False,  # full attention => long_500k skipped
+)

@@ -1,0 +1,11 @@
+"""starcoder2-7b [arXiv:2402.19173]: GQA + RoPE, LN + bias, GELU MLP."""
+from repro.models.lm import ArchConfig
+
+CONFIG = ArchConfig(
+    name="starcoder2-7b", family="dense",
+    n_layers=32, d_model=4608, n_heads=36, n_kv_heads=4, head_dim=128,
+    d_ff=18432, vocab_size=49152,
+    attn_pattern="full", rope_theta=1e5,
+    ffn_kind="gelu", norm="layernorm", use_bias=True,
+    subquadratic=False,  # full attention => long_500k skipped (DESIGN.md)
+)

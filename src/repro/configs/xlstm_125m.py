@@ -1,0 +1,12 @@
+"""xlstm-125m [arXiv:2405.04517]: sLSTM + mLSTM blocks (d_ff=0: the
+blocks carry their own projections)."""
+from repro.models.lm import ArchConfig
+
+CONFIG = ArchConfig(
+    name="xlstm-125m", family="ssm",
+    n_layers=12, d_model=768, n_heads=4, n_kv_heads=4,
+    d_ff=0, vocab_size=50304,
+    slstm_at=(3, 9),  # ~[5:1] mLSTM:sLSTM mix
+    norm="rmsnorm", tie_embeddings=True,
+    subquadratic=True,  # recurrent state; runs long_500k
+)

@@ -1,0 +1,12 @@
+"""zamba2-1.2b [arXiv:2411.15242]: Mamba2 backbone + shared attention."""
+from repro.models.lm import ArchConfig
+
+CONFIG = ArchConfig(
+    name="zamba2-1.2b", family="hybrid",
+    n_layers=38, d_model=2048, n_heads=32, n_kv_heads=32, head_dim=64,
+    d_ff=8192, vocab_size=32000,
+    ssm_state=64, ssm_head_dim=64, shared_attn_every=6,
+    attn_pattern="full", rope_theta=1e4,
+    ffn_kind="gelu", norm="rmsnorm",
+    subquadratic=True,  # SSM state recurrence; runs long_500k
+)

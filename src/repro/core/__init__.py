@@ -1,0 +1,4 @@
+# The paper's primary contribution: MXFP4 microscaling numerics, the
+# analog CTT-CIM datapath simulation, and the digital MXFP4 attention
+# path. Sibling subpackages provide the framework substrates.
+from repro.core import cim, digital, mx  # noqa: F401

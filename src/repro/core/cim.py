@@ -1,0 +1,242 @@
+"""Analog CTT-CIM datapath simulation (paper §3, §5.2.2).
+
+Models a CIM linear layer ``y = x @ w`` where:
+
+- ``w`` is MXFP4-quantized along K and resident in the array as INT5 codes,
+- ``x`` is MXFP4-quantized per (row, 32-block) and streamed as bit-planes
+  (bit-serial streaming is numerically exact — see tests — so we compute in
+  the signed integer code domain directly),
+- each block's integer partial sum ``S = sum_i cx_i * cw_i`` carries scale
+  ``2^(E_X + E_W) / 4``; contributions are aligned to a target exponent
+  ``E_N`` through current mirrors with a limited shift budget of ``CM``
+  bits.  Blocks with exponent in ``[E_N - CM, E_N]`` are exact, blocks
+  below **underflow to zero**, blocks above are shift-clamped (overflow
+  "diminishes high-magnitude activations", §3.2.1),
+- the optional second pass recomputes underflowed blocks at
+  ``E_N2 = E_N - CM`` and merges (Row-Hist 2-Pass),
+- an n-bit SAR ADC uniformly quantizes each (pass, column) sum with a
+  per-layer calibrated full scale.
+
+Exponent-target strategies (Fig 5): offline ``row_hist`` (per-layer E_N =
+max observed block exponent, eliminating overflow) and online ``row0`` /
+``row_opt`` baselines.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mx as mxlib
+from repro.core.mx import BLOCK, MX, MXW
+
+
+@dataclasses.dataclass(frozen=True)
+class CIMConfig:
+    adc_bits: int | None = 10  # None disables the ADC model (Fig 5 style)
+    cm_bits: int = 3
+    two_pass: bool = True
+    strategy: str = "row_hist"  # row_hist | row0 | row_opt
+    strategy_offset: int = 0  # constant E_N offset for online strategies
+    collect_stats: bool = False
+
+
+class LayerCalib(NamedTuple):
+    e_n: jax.Array  # [] int32 per-layer target exponent
+    adc_fs: jax.Array  # [] f32 ADC full scale (aligned-integer units)
+
+
+def _block_partials(x: jax.Array, w: MXW):
+    """Quantize activations and form per-block integer partial sums.
+
+    Returns (S, es) where S[..., b, m] is the exact int partial sum (f32
+    carrier, |S| <= 32*144 so exact) and es[..., b, m] = E_X + E_W.
+    """
+    k = w.codes.shape[0]
+    xq = mxlib.quantize(x[..., :k])
+    nb = xq.codes.shape[-1] // BLOCK
+    cx = xq.codes.reshape(xq.codes.shape[:-1] + (nb, BLOCK)).astype(jnp.float32)
+    cw = w.codes.reshape(nb, BLOCK, -1).astype(jnp.float32)
+    s = jnp.einsum("...bk,bkm->...bm", cx, cw)
+    es = xq.exps[..., :, None].astype(jnp.int32) + w.exps.astype(jnp.int32)
+    return s, es
+
+
+def _adc(c: jax.Array, fs: jax.Array, bits: int | None) -> jax.Array:
+    if bits is None:
+        return c
+    half = 2.0 ** (bits - 1)
+    delta = fs / half
+    q = jnp.clip(jnp.round(c / delta), -half, half - 1.0)
+    return q * delta
+
+
+def _target_exponent(cfg: CIMConfig, calib: LayerCalib | None, es: jax.Array):
+    if cfg.strategy == "row_hist":
+        assert calib is not None, "row_hist needs offline calibration"
+        return calib.e_n
+    if cfg.strategy == "row0":
+        # first block-row's exponent reused for all rows (per column)
+        return es[..., 0:1, :] + cfg.strategy_offset
+    if cfg.strategy == "row_opt":
+        # per-column median shared exponent
+        return (
+            jnp.median(es, axis=-2, keepdims=True).astype(jnp.int32)
+            + cfg.strategy_offset
+        )
+    raise ValueError(f"unknown strategy {cfg.strategy!r}")
+
+
+def _en_scale(e_n, delta: int = 0) -> jax.Array:
+    """2^(E_N - delta) broadcastable to [..., M] (squeezes the block axis
+    online strategies carry)."""
+    sc = mxlib.exp2i(jnp.asarray(e_n, jnp.int32) - delta)
+    if sc.ndim > 0:
+        sc = sc[..., 0, :]
+    return sc
+
+
+def cim_linear(
+    x: jax.Array,
+    w: MXW,
+    cfg: CIMConfig,
+    calib: LayerCalib | None = None,
+):
+    """Analog CIM forward. Returns (y[..., M] float32, stats dict)."""
+    s, es = _block_partials(x, w)
+    e_n = _target_exponent(cfg, calib, es)
+    sh = es - e_n  # required shift; exact iff -CM <= sh <= 0
+    cm = cfg.cm_bits
+
+    over = sh > 0
+    under1 = sh < -cm
+    a1 = jnp.where(
+        under1, 0.0, s * mxlib.exp2i(jnp.clip(sh, -cm, 0))
+    )
+    c1 = jnp.sum(a1, axis=-2)  # [..., M] in units of 2^{E_N}/4
+
+    fs = calib.adc_fs if calib is not None else jnp.float32(0.0)
+    c1q = _adc(c1, fs, cfg.adc_bits)
+    y = c1q * _en_scale(e_n) * 0.25
+
+    under2 = jnp.zeros_like(under1)
+    if cfg.two_pass:
+        sh2 = sh + cm  # pass-2 target E_N2 = E_N - CM
+        under2 = sh2 < -cm
+        a2 = jnp.where(
+            under1 & ~under2,
+            s * mxlib.exp2i(jnp.clip(sh2, -cm, 0)),
+            0.0,
+        )
+        c2 = jnp.sum(a2, axis=-2)
+        c2q = _adc(c2, fs, cfg.adc_bits)
+        y = y + c2q * _en_scale(e_n, cm) * 0.25
+
+    stats = {}
+    if cfg.collect_stats:
+        nz = jnp.abs(s) > 0  # only blocks with nonzero partials matter
+        tot = jnp.maximum(jnp.sum(nz), 1)
+        stats = {
+            "overflow_rate": jnp.sum(over & nz) / tot,
+            "underflow_rate_p1": jnp.sum(under1 & nz) / tot,
+            "underflow_rate_p2": jnp.sum((under1 & under2) & nz) / tot,
+        }
+    return y.astype(jnp.float32), stats
+
+
+# ------------------------------------------------------------ calibration
+
+def calibrate_rowhist(
+    batches, w: MXW, cfg: CIMConfig, percentile: float = 100.0
+) -> LayerCalib:
+    """Offline Row-Hist calibration (paper §3.2.1): pick the per-layer
+    target exponent from the distribution of block output exponents over
+    representative batches (prioritising zero overflow => max), then
+    calibrate the ADC full scale at that E_N.
+    """
+    e_n = None
+    for xb in batches:
+        s, es = _block_partials(xb, w)
+        live = jnp.abs(s) > 0
+        cand = jnp.where(live, es, -(10**6))
+        if percentile >= 100.0:
+            m = jnp.max(cand)
+        else:
+            m = jnp.percentile(jnp.where(live, es, jnp.nan), percentile)
+            m = jnp.asarray(jnp.ceil(m), jnp.int32)
+        e_n = m if e_n is None else jnp.maximum(e_n, m)
+    e_n = jnp.asarray(e_n, jnp.int32)
+
+    fs = jnp.float32(0.0)
+    cm = cfg.cm_bits
+    for xb in batches:
+        s, es = _block_partials(xb, w)
+        sh = es - e_n
+        a1 = jnp.where(sh < -cm, 0.0, s * mxlib.exp2i(jnp.clip(sh, -cm, 0)))
+        fs = jnp.maximum(fs, jnp.max(jnp.abs(jnp.sum(a1, axis=-2))))
+        if cfg.two_pass:
+            sh2 = sh + cm
+            a2 = jnp.where(
+                (sh < -cm) & (sh2 >= -cm),
+                s * mxlib.exp2i(jnp.clip(sh2, -cm, 0)),
+                0.0,
+            )
+            fs = jnp.maximum(fs, jnp.max(jnp.abs(jnp.sum(a2, axis=-2))))
+    return LayerCalib(e_n=e_n, adc_fs=fs)
+
+
+# ------------------------------------------------- bias-column equivalence
+
+def cim_linear_unsigned(x: jax.Array, w: MXW, cfg: CIMConfig, calib: LayerCalib):
+    """Hardware-faithful variant: weights stored as *unsigned* [0, 24]
+    codes (w + 12); the bias term ``12 * sum_i x_i`` is produced by an
+    identical bias column per block and subtracted per output channel with
+    the same per-block alignment (paper eq. (2)). Numerically identical to
+    :func:`cim_linear` up to the shared ADC — used by tests to prove the
+    affine encoding + bias-column scheme is exact."""
+    k = w.codes.shape[0]
+    xq = mxlib.quantize(x[..., :k])
+    nb = xq.codes.shape[-1] // BLOCK
+    cx = xq.codes.reshape(xq.codes.shape[:-1] + (nb, BLOCK)).astype(jnp.float32)
+    wu = (w.codes.astype(jnp.int16) + mxlib.WEIGHT_BIAS).astype(jnp.float32)
+    cwu = wu.reshape(nb, BLOCK, -1)
+    s_u = jnp.einsum("...bk,bkm->...bm", cx, cwu)  # unsigned-weight partials
+    bias = jnp.sum(cx, axis=-1)[..., None] * float(mxlib.WEIGHT_BIAS)  # [...,b,1]
+    s = s_u - bias  # per-block, pre-alignment subtraction of the bias column
+    es = xq.exps[..., :, None].astype(jnp.int32) + w.exps.astype(jnp.int32)
+
+    e_n = _target_exponent(cfg, calib, es)
+    cm = cfg.cm_bits
+    sh = es - e_n
+    a1 = jnp.where(sh < -cm, 0.0, s * mxlib.exp2i(jnp.clip(sh, -cm, 0)))
+    c1q = _adc(jnp.sum(a1, axis=-2), calib.adc_fs, cfg.adc_bits)
+    y = c1q * _en_scale(e_n) * 0.25
+    if cfg.two_pass:
+        sh2 = sh + cm
+        a2 = jnp.where(
+            (sh < -cm) & (sh2 >= -cm),
+            s * mxlib.exp2i(jnp.clip(sh2, -cm, 0)),
+            0.0,
+        )
+        c2q = _adc(jnp.sum(a2, axis=-2), calib.adc_fs, cfg.adc_bits)
+        y = y + c2q * _en_scale(e_n, cm) * 0.25
+    return y.astype(jnp.float32)
+
+
+# --------------------------------------------------- bit-plane decomposition
+
+def bitplane_dot(cx: jax.Array, cw: jax.Array) -> jax.Array:
+    """Bit-serial evaluation of sum_i cx_i*cw_i with cx in [-12,12] streamed
+    as 5-bit two's-complement planes (paper eq. (1)); exactness is tested
+    against the direct integer dot."""
+    xi = cx.astype(jnp.int32) & 0x1F  # 5-bit two's complement
+    planes = [(xi >> j) & 1 for j in range(5)]
+    weights = [1, 2, 4, 8, -16]
+    t = [
+        jnp.sum(p.astype(jnp.float32) * cw.astype(jnp.float32), axis=-1)
+        for p in planes
+    ]
+    return sum(wj * tj for wj, tj in zip(weights, t))

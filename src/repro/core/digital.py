@@ -1,0 +1,87 @@
+"""Digital-stage numerics (paper §4.4–4.5): MXFP4 systolic attention with
+BF16 accumulation and a FlashAttention-style deferred softmax.
+
+This is the *numerics simulator* used for fidelity experiments; the
+production attention path is the Pallas flash-attention kernel in
+``repro.kernels.flash_attention``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mx as mxlib
+
+
+def mx_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = False,
+    tile: int = 64,
+    quantize_sv: bool = True,
+) -> jax.Array:
+    """Scaled dot-product attention on the paper's digital datapath.
+
+    q, k, v: [..., S, D] (already per-head). Q and K are MXFP4-quantized
+    row-major along D (the QK^T contraction); softmax runs in BF16 with a
+    FlashAttention-style running max/sum over key tiles (deferred final
+    division); the probability tiles and V (column-wise along S, i.e. the
+    SV contraction) are re-quantized to MXFP4 before the SV systolic array.
+    """
+    dk = q.shape[-1]
+    qq = mxlib.fake_quant(q.astype(jnp.float32))
+    kq = mxlib.fake_quant(k.astype(jnp.float32))
+    s = jnp.einsum("...qd,...kd->...qk", qq, kq).astype(jnp.bfloat16)
+    s = (s.astype(jnp.float32) * (dk**-0.5)).astype(jnp.bfloat16)
+
+    sl = s.shape[-1]
+    if causal:
+        ii = jnp.arange(s.shape[-2])[:, None]
+        jj = jnp.arange(sl)[None, :]
+        s = jnp.where(jj <= ii, s, jnp.bfloat16(-jnp.inf))
+
+    # FlashAttention-style streaming softmax over key tiles of ``tile``.
+    pad = (-sl) % tile
+    if pad:
+        s = jnp.pad(s, [(0, 0)] * (s.ndim - 1) + [(0, pad)],
+                    constant_values=-jnp.inf)
+        v = jnp.pad(v, [(0, 0)] * (v.ndim - 2) + [(0, pad), (0, 0)])
+    nt = s.shape[-1] // tile
+    st = s.reshape(s.shape[:-1] + (nt, tile)).astype(jnp.float32)
+    vt = v.reshape(v.shape[:-2] + (nt, tile, v.shape[-1])).astype(jnp.float32)
+
+    m = jnp.full(st.shape[:-2], -jnp.inf, jnp.float32)
+    acc = jnp.zeros(st.shape[:-2] + (v.shape[-1],), jnp.float32)
+    den = jnp.zeros(st.shape[:-2], jnp.float32)
+    for t in range(nt):
+        sc = st[..., t, :]
+        m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(sc - m_new[..., None])
+        p = jnp.where(jnp.isfinite(sc), p, 0.0)
+        if quantize_sv:
+            p = mxlib.fake_quant(p)
+            vtile = mxlib.fake_quant_axis(vt[..., t, :, :], axis=-2)
+        else:
+            vtile = vt[..., t, :, :]
+        pv = jnp.einsum("...qk,...kd->...qd", p, vtile)
+        acc = acc * corr[..., None] + pv
+        den = den * corr + jnp.sum(p, axis=-1)
+        m = m_new
+    den = jnp.where(den == 0.0, 1.0, den)
+    out = acc / den[..., None]  # deferred division (normalizer block)
+    return out.astype(jnp.bfloat16)
+
+
+def attention_ref(q, k, v, causal: bool = False) -> jax.Array:
+    """Full-precision oracle."""
+    dk = q.shape[-1]
+    s = jnp.einsum("...qd,...kd->...qk", q, k).astype(jnp.float32) * dk**-0.5
+    if causal:
+        ii = jnp.arange(s.shape[-2])[:, None]
+        jj = jnp.arange(s.shape[-1])[None, :]
+        s = jnp.where(jj <= ii, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("...qk,...kd->...qd", p, v.astype(jnp.float32))

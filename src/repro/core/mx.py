@@ -1,0 +1,232 @@
+"""MXFP4 microscaling numerics (OCP MX spec, paper §2.3 + Appendix A).
+
+A length-``k`` (k = 32) block is stored as 32 E2M1 ("FP4") private elements
+plus one shared E8M0 power-of-two scale:  V_i = P_i * 2^E.
+
+Internally we carry FP4 elements as *integer codes* equal to ``2 * P_i``,
+i.e. values in ``{0, ±1, ±2, ±3, ±4, ±6, ±8, ±12}`` — exactly the paper's
+lossless INT5 affine encoding of FP4 (activations use the signed [-12, 12]
+code directly; weights add the bias ``w_b = 12`` to land in [0, 24]).
+
+All functions are jit-friendly pure jnp.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 32  # MX block size along the contraction axis
+EMAX_ELEM = 2  # largest E2M1 exponent (6 = 1.5 * 2^2)
+FP4_MAX = 6.0
+CODE_MAX = 12  # 2 * FP4_MAX
+WEIGHT_BIAS = 12  # INT5 affine bias for unsigned weight encoding
+E8M0_MIN, E8M0_MAX = -127, 127
+
+# |code| -> E2M1 nibble (sign bit added separately):  value = code / 2
+#   e=0: {0, 0.5}; e=1: {1, 1.5}; e=2: {2, 3}; e=3: {4, 6}
+_ABS_CODE_TO_NIBBLE = jnp.array(
+    [0, 1, 2, 3, 4, 0, 5, 0, 6, 0, 0, 0, 7], dtype=jnp.uint8
+)  # index = |code|, valid only at {0,1,2,3,4,6,8,12}
+_NIBBLE_TO_CODE = jnp.array([0, 1, 2, 3, 4, 6, 8, 12], dtype=jnp.int8)
+
+
+class MX(NamedTuple):
+    """A block-quantized tensor. ``codes`` has the (zero-padded) original
+    shape; ``exps`` replaces the quantized axis (last) by n_blocks.
+
+    value[..., b*32 + i] = codes[..., b*32 + i] / 2 * 2^exps[..., b]
+    """
+
+    codes: jax.Array  # int8 in [-12, 12], shape [..., K_pad]
+    exps: jax.Array  # int8 unbiased E8M0 exponent, shape [..., K_pad // 32]
+
+
+def exp2i(e: jax.Array) -> jax.Array:
+    """Exact 2^e (float32) for integer-valued ``e`` via exponent-field
+    bit construction. ``jnp.exp2`` is only ~1-ulp accurate on CPU (it
+    lowers to ``exp(x*ln2)``), which breaks bit-exactness; this is exact
+    for e in [-252, 252] (split into two factors to cover beyond the
+    single-factor [-126, 127] range)."""
+    e = jnp.asarray(e, jnp.int32)
+    h1 = jnp.clip(e // 2, -126, 127)
+    h2 = jnp.clip(e - h1, -126, 127)
+
+    def f(h):
+        return jax.lax.bitcast_convert_type(
+            ((h + 127) << 23).astype(jnp.int32), jnp.float32
+        )
+
+    return f(h1) * f(h2)
+
+
+def _pad_last(x: jax.Array, multiple: int = BLOCK) -> jax.Array:
+    k = x.shape[-1]
+    rem = (-k) % multiple
+    if rem:
+        pad = [(0, 0)] * (x.ndim - 1) + [(0, rem)]
+        x = jnp.pad(x, pad)
+    return x
+
+
+def quantize_e2m1(y: jax.Array) -> jax.Array:
+    """Round ``y`` to the E2M1 grid (round-to-nearest-even), returning
+    integer codes ``2 * fp4`` as int8. Input must already be scaled."""
+    ay = jnp.abs(y)
+    # piecewise grid step: 0.5 for |y|<2, 1 for [2,4), 2 for [4,6]
+    e = jnp.clip(jnp.floor(jnp.log2(jnp.maximum(ay, 2.0**-10))), 0, EMAX_ELEM)
+    step = exp2i(e - 1)  # in units of value; code step = 2*step
+    q = jnp.rint(ay / step) * step  # ties-to-even on the local grid
+    q = jnp.minimum(q, FP4_MAX)
+    code = jnp.sign(y) * (2.0 * q)
+    return code.astype(jnp.int8)
+
+
+def quantize(x: jax.Array, axis: int = -1) -> MX:
+    """Block-quantize ``x`` to MXFP4 along ``axis`` (padded to 32)."""
+    x = jnp.moveaxis(x, axis, -1) if axis not in (-1, x.ndim - 1) else x
+    x = _pad_last(x.astype(jnp.float32))
+    shp = x.shape
+    xb = x.reshape(shp[:-1] + (shp[-1] // BLOCK, BLOCK))
+    amax = jnp.max(jnp.abs(xb), axis=-1)
+    # OCP MX: shared_exp = floor(log2(max)) - emax_elem; zero block -> emin
+    e = jnp.floor(jnp.log2(jnp.where(amax > 0, amax, 1.0))) - EMAX_ELEM
+    e = jnp.where(amax > 0, e, E8M0_MIN)
+    e = jnp.clip(e, E8M0_MIN, E8M0_MAX)
+    codes = quantize_e2m1(xb * exp2i(-e)[..., None])
+    return MX(codes.reshape(shp), e.astype(jnp.int8))
+
+
+def dequantize(mx: MX, out_len: int | None = None, dtype=jnp.float32) -> jax.Array:
+    shp = mx.codes.shape
+    cb = mx.codes.reshape(shp[:-1] + (shp[-1] // BLOCK, BLOCK))
+    v = cb.astype(jnp.float32) * 0.5 * exp2i(mx.exps)[..., None]
+    v = v.reshape(shp)
+    if out_len is not None and out_len != shp[-1]:
+        v = v[..., :out_len]
+    return v.astype(dtype)
+
+
+def encode_weight_unsigned(mx: MX) -> jax.Array:
+    """INT5 affine map of weight codes into [0, 24] (uint8)."""
+    return (mx.codes.astype(jnp.int16) + WEIGHT_BIAS).astype(jnp.uint8)
+
+
+def decode_weight_unsigned(u: jax.Array) -> jax.Array:
+    return (u.astype(jnp.int16) - WEIGHT_BIAS).astype(jnp.int8)
+
+
+# ---------------------------------------------------------------- packing
+
+def pack_codes(codes: jax.Array) -> jax.Array:
+    """Pack int8 codes (2*fp4) into E2M1 nibbles, two per uint8.
+
+    Nibble layout: [sign(1) | exp(2) | man(1)]; even element in low nibble.
+    Last axis must be even (blocks of 32 always are).
+    """
+    sign = (codes < 0).astype(jnp.uint8)
+    mag = jnp.abs(codes.astype(jnp.int32))
+    nib = _ABS_CODE_TO_NIBBLE[mag] | (sign << 3)
+    lo, hi = nib[..., 0::2], nib[..., 1::2]
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_codes(packed: jax.Array) -> jax.Array:
+    lo = packed & 0x0F
+    hi = (packed >> 4) & 0x0F
+    nib = jnp.stack([lo, hi], axis=-1).reshape(packed.shape[:-1] + (-1,))
+    mag = _NIBBLE_TO_CODE[(nib & 0x7).astype(jnp.int32)]
+    sign = jnp.where((nib >> 3) & 1, -1, 1).astype(jnp.int8)
+    return (sign * mag).astype(jnp.int8)
+
+
+def exps_to_biased(exps: jax.Array) -> jax.Array:
+    """Unbiased int8 exponent -> biased uint8 (E8M0 storage)."""
+    return (exps.astype(jnp.int16) + 127).astype(jnp.uint8)
+
+
+def exps_from_biased(b: jax.Array) -> jax.Array:
+    return (b.astype(jnp.int16) - 127).astype(jnp.int8)
+
+
+# ------------------------------------------------------------- fake quant
+
+@jax.custom_vjp
+def fake_quant(x: jax.Array) -> jax.Array:
+    """Quantize-dequantize along the last axis with a straight-through
+    estimator (QAT-style). Shape is preserved (pad/unpad internally)."""
+    k = x.shape[-1]
+    return dequantize(quantize(x), out_len=k, dtype=x.dtype)
+
+
+def _fq_fwd(x):
+    return fake_quant(x), None
+
+
+def _fq_bwd(_, g):
+    return (g,)
+
+
+fake_quant.defvjp(_fq_fwd, _fq_bwd)
+
+
+def fake_quant_axis(x: jax.Array, axis: int) -> jax.Array:
+    if axis in (-1, x.ndim - 1):
+        return fake_quant(x)
+    xm = jnp.moveaxis(x, axis, -1)
+    return jnp.moveaxis(fake_quant(xm), -1, axis)
+
+
+# ------------------------------------------------------------ bf16 helper
+
+def to_bf16(x: jax.Array) -> jax.Array:
+    return x.astype(jnp.bfloat16)
+
+
+def mx_dot_bf16(a: MX, b: MX, bf16_partials: bool = False) -> jax.Array:
+    """Digital-path dot product a @ b with MXFP4 operands and BF16-style
+    accumulation semantics (paper §4.5).
+
+    a: quantized along last axis, codes [..., K]; b: quantized along FIRST
+    axis of a [K, N] weight (codes [K, N], exps [Kb, N] — produced by
+    ``quantize(w.T).T``-style helpers below).
+
+    With ``bf16_partials`` the per-32-block partial sums are rounded to
+    BF16 before the cross-block accumulation (emulating the systolic
+    array's BF16 accumulator at block granularity); otherwise f32
+    accumulation with a final bf16 round (fast path).
+    """
+    va = dequantize(a)  # [..., K]
+    vb = dequantize_w(b)  # [K, N]
+    K = vb.shape[0]
+    if bf16_partials:
+        nb = K // BLOCK
+        vab = va[..., :K].reshape(va.shape[:-1] + (nb, BLOCK))
+        vbb = vb.reshape(nb, BLOCK, -1)
+        parts = jnp.einsum("...bk,bkn->...bn", vab, vbb)
+        parts = parts.astype(jnp.bfloat16).astype(jnp.float32)
+        return jnp.sum(parts, axis=-2).astype(jnp.bfloat16)
+    return jnp.matmul(va[..., :K], vb).astype(jnp.bfloat16)
+
+
+class MXW(NamedTuple):
+    """Weight matrix [K, N] quantized along K (contraction axis).
+
+    codes: int8 [K_pad, N]; exps: int8 [K_pad//32, N].
+    """
+
+    codes: jax.Array
+    exps: jax.Array
+
+
+def quantize_w(w: jax.Array) -> MXW:
+    """Quantize a [K, N] weight along K (axis 0)."""
+    mx = quantize(w.T)  # blocks along K
+    return MXW(jnp.swapaxes(mx.codes, -1, -2), jnp.swapaxes(mx.exps, -1, -2))
+
+
+def dequantize_w(w: MXW, dtype=jnp.float32) -> jax.Array:
+    mx = MX(jnp.swapaxes(w.codes, -1, -2), jnp.swapaxes(w.exps, -1, -2))
+    return jnp.swapaxes(dequantize(mx, dtype=dtype), -1, -2)

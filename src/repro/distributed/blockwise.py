@@ -1,0 +1,379 @@
+"""Block-level roofline analysis.
+
+XLA's HloCostAnalysis counts a while-loop body ONCE (not x trip count), so
+cost_analysis() on the full scanned-layer model undercounts FLOPs/bytes/
+collectives by ~n_layers. The full-model compile remains the existence +
+memory proof; *this* module compiles ONE block per distinct segment
+signature with exactly the shardings the model uses, reads its per-device
+cost + collective schedule from XLA, and composes totals with the known
+trip counts:
+
+  train:   sum_seg n_seg * (fwd+bwd block cost) * k_micro
+           + (stem + head&loss) * k_micro + optimizer
+  serve:   sum_seg n_seg * fwd block cost + stem + head
+
+Per-block compiles use the dense attention path (exact quadratic FLOPs —
+the chunked-scan flash path would be undercounted); blocks whose sequence
+is too large to compile densely are fitted with a two-point quadratic
+cost model a*S + b*S^2 measured at S0 and 2*S0 (exact for this codebase,
+where masking does not skip tiles — a §Perf item). Recurrent xLSTM cells
+are counted as block_cost + (S-1) * per-step cell cost (cell compiled
+standalone). The tiny inter-chunk SSD state scan (O(b*h*p*n) per chunk)
+is the only remaining undercount — negligible and documented.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs as C
+from repro.distributed import roofline as rl
+from repro.distributed import sharding as shd
+from repro.layers.common import RunCtx, convert_params_mxfp4, convert_specs_mxfp4
+from repro.models import lm
+from repro.optim import adamw
+
+DENSE_MAX = 4096  # largest seq compiled densely per block
+
+
+def _cost_of(fn, args, shardings, mesh, n_dev):
+    jitted = jax.jit(fn, in_shardings=shardings)
+    with mesh:
+        compiled = jitted.lower(*args).compile()
+    cost = compiled.cost_analysis()
+    coll = rl.parse_collectives(compiled.as_text(), n_dev)
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "wire": coll.wire_bytes,
+    }
+
+
+def _zero():
+    return {"flops": 0.0, "bytes": 0.0, "wire": 0.0}
+
+
+def _acc(tot, c, mult=1.0):
+    for k in tot:
+        tot[k] += c[k] * mult
+    return tot
+
+
+def _seg_structs(cfg, seg):
+    box = {}
+
+    def only_p():
+        if seg.kind == "zshared":
+            p, s = lm._zshared_init(jax.random.PRNGKey(0), cfg)
+        else:
+            p, s = lm._block_init(jax.random.PRNGKey(0), cfg, seg)
+        box["specs"] = s
+        return p
+
+    return jax.eval_shape(only_p), box["specs"]
+
+
+def _block_fn(cfg, seg, ctx, positions, pos, with_x0):
+    def fn(p, x, cache=None):
+        shared = p if seg.kind == "zshared" else None
+        pp = {} if seg.kind == "zshared" else p
+        x0 = x if with_x0 else None
+        y, nc = lm._block_apply(
+            ctx, cfg, seg, pp, x, positions, cache, pos, shared, x0
+        )
+        return (y, nc) if cache is not None else y
+
+    return fn
+
+
+def _sig(seg):
+    return (seg.kind, seg.attn, seg.mamba, seg.xl)
+
+
+def analyze_cell(
+    cfg,
+    shape: C.Shape,
+    mesh,
+    quant: str | None = None,
+    fsdp: bool = True,
+    k_micro: int | None = None,
+) -> dict:
+    """Trip-count-exact per-device roofline totals for one cell."""
+    from repro.launch import steps as steps_mod
+
+    n_dev = mesh.devices.size
+    mode = {"train": "train", "prefill": "prefill", "decode": "decode"}[
+        shape.kind
+    ]
+    is_train = shape.kind == "train"
+    quant = quant or ("mxfp4_ste_prequant" if is_train else "mxfp4_wonly")
+    rules = shd.make_rules(cfg, mesh, mode, batch_size=shape.batch)
+    ctx = RunCtx(
+        shd=shd.ShardingCtx(mesh=mesh, rules=rules),
+        quant=quant,
+        decode=shape.kind == "decode",
+        dense_attn_max=1 << 30,  # dense path: exact attention FLOPs
+        unroll_scans=True,  # count chunk-loop trips exactly
+    )
+    pctx = shd.ShardingCtx(
+        mesh=mesh,
+        rules=steps_mod.param_rules(rules, mesh, fsdp and is_train),
+    )
+    if k_micro is None:
+        k_micro = steps_mod.pick_microbatches(mesh, shape) if is_train else 1
+    b = shape.batch // k_micro
+    d = cfg.d_model
+
+    segments = lm.build_segments(cfg)
+    counts: dict[Any, int] = {}
+    rep: dict[Any, Any] = {}
+    for seg in segments:
+        key = _sig(seg)
+        counts[key] = counts.get(key, 0) + seg.n
+        rep[key] = seg
+
+    total = _zero()
+    details = {}
+
+    def _xsh(bb, ss):
+        return shd.resolve_with_divisibility(
+            ("batch", "seq", "embed"),
+            jax.ShapeDtypeStruct((bb, ss, d), jnp.bfloat16), ctx.shd, mesh,
+        )
+
+    for key, seg in rep.items():
+        n = counts[key]
+        pstruct, specs = _seg_structs(cfg, seg)
+        if quant == "mxfp4_wonly":
+            qstruct = jax.eval_shape(convert_params_mxfp4, pstruct)
+            specs = convert_specs_mxfp4(specs, pstruct)
+            pstruct = qstruct
+        elif quant == "mxfp4_ste_prequant":
+            from repro.layers.common import quantize_weights_tree
+
+            pstruct = jax.eval_shape(quantize_weights_tree, pstruct)
+        p_shard = shd.resolve_with_divisibility(specs, pstruct, pctx, mesh)
+
+        def block_cost(s_eval, with_grad):
+            def fwd(p, x):
+                posn = jnp.broadcast_to(jnp.arange(s_eval)[None], (b, s_eval))
+                fn = _block_fn(cfg, seg, ctx, posn, None, seg.kind == "zshared")
+                return fn(p, x)
+
+            xs = jax.ShapeDtypeStruct((b, s_eval, d), jnp.bfloat16)
+            x_spec = _xsh(b, s_eval)
+            if not with_grad:
+                return _cost_of(fwd, (pstruct, xs), (p_shard, x_spec), mesh,
+                                n_dev)
+
+            def fwd_bwd(p, x, ct):
+                y, vjp = jax.vjp(jax.checkpoint(fwd), p, x)
+                dp, dx = vjp(ct)
+                return y, dp, dx
+
+            return _cost_of(
+                fwd_bwd, (pstruct, xs, xs), (p_shard, x_spec, x_spec), mesh,
+                n_dev,
+            )
+
+        if shape.kind == "decode":
+            cstruct = jax.eval_shape(
+                lambda sg=seg: lm._block_cache(cfg, sg, shape.batch, shape.seq)
+            )
+            cspecs = lm._block_cache_specs(seg)
+            c_shard = shd.resolve_with_divisibility(cspecs, cstruct, ctx.shd,
+                                                    mesh)
+
+            def dec(p, x, cache):
+                posn = jnp.full((shape.batch, 1), shape.seq - 1, jnp.int32)
+                shared = p if seg.kind == "zshared" else None
+                pp = {} if seg.kind == "zshared" else p
+                y, nc = lm._block_apply(
+                    ctx, cfg, seg, pp, x, posn,
+                    cache, jnp.int32(shape.seq - 1), shared,
+                    x if seg.kind == "zshared" else None,
+                )
+                return y, nc
+
+            xs = jax.ShapeDtypeStruct((shape.batch, 1, d), jnp.bfloat16)
+            xsh = _xsh(shape.batch, 1)
+            c = _cost_of(dec, (pstruct, xs, cstruct),
+                         (p_shard, xsh, c_shard), mesh, n_dev)
+        elif shape.seq <= DENSE_MAX:
+            c = block_cost(shape.seq, is_train)
+        else:
+            s0 = DENSE_MAX // 2
+            c1 = block_cost(s0, is_train)
+            c2 = block_cost(2 * s0, is_train)
+            c = {}
+            for kk in c1:
+                bq = (c2[kk] - 2 * c1[kk]) / (2 * s0 * s0)
+                aq = (c1[kk] - bq * s0 * s0) / s0
+                c[kk] = max(aq * shape.seq + bq * shape.seq**2, 0.0)
+
+        # sLSTM recurrent cells: + (S-1) x per-step cost (x3 for fwd+bwd)
+        # (mLSTM is chunkwise-parallel now and fully counted via unroll)
+        if seg.kind == "slstm" and shape.kind != "decode":
+            cell = _cell_step_cost(cfg, seg, b, mesh, ctx, n_dev)
+            steps_mult = (shape.seq - 1) * (3.0 if is_train else 1.0)
+            c = _acc(dict(c), cell, mult=steps_mult)
+
+        mult = n * (k_micro if is_train else 1)
+        _acc(total, c, mult)
+        details[str(key[0]) + f"_n{n}"] = {**c, "mult": mult}
+
+    # stem (embedding) + head (+ loss & grads) per microbatch
+    stem_head = _stem_head_cost(cfg, shape, mesh, ctx, pctx, quant, b,
+                                is_train, n_dev)
+    _acc(total, stem_head, mult=k_micro if is_train else 1)
+    details["stem_head"] = stem_head
+
+    if is_train:
+        optc = _optimizer_cost(cfg, mesh, pctx, n_dev)
+        _acc(total, optc)
+        details["optimizer"] = optc
+        if quant == "mxfp4_ste_prequant":
+            wq = _weight_quant_cost(cfg, mesh, pctx, n_dev)
+            _acc(total, wq)
+            details["weight_quant"] = wq
+
+    coll = rl.CollectiveStats(wire_bytes=total["wire"])
+    terms = rl.roofline_terms(
+        {"flops": total["flops"], "bytes accessed": total["bytes"]},
+        coll, n_dev,
+    )
+    terms["k_micro"] = k_micro
+    terms["details"] = details
+    return terms
+
+
+def _cell_step_cost(cfg, seg, b, mesh, ctx, n_dev):
+    from repro.layers import xlstm as xl
+
+    st = seg.xl
+    h = st.n_heads
+    rep = NamedSharding(mesh, P())
+    bsh = shd.resolve_with_divisibility(
+        ("batch",), jax.ShapeDtypeStruct((b,), jnp.int32), ctx.shd, mesh
+    )
+
+    def shard_like(shape_):
+        names = [("batch",)[0] if i == 0 else None for i in range(len(shape_))]
+        return NamedSharding(mesh, ctx.shd.resolve(tuple(names)))
+
+    if seg.kind == "mlstm":
+        dk = st.head_dim
+        carry = (
+            jax.ShapeDtypeStruct((b, h, dk, dk), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, dk), jnp.float32),
+            jax.ShapeDtypeStruct((b, h), jnp.float32),
+        )
+        inp = (
+            jax.ShapeDtypeStruct((b, h, dk), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, dk), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, dk), jnp.float32),
+            jax.ShapeDtypeStruct((b, h), jnp.float32),
+            jax.ShapeDtypeStruct((b, h), jnp.float32),
+        )
+
+        def step(c, i):
+            return xl._mlstm_step(c, i, dk**-0.5)
+
+        sh = (
+            tuple(shard_like(x.shape) for x in carry),
+            tuple(shard_like(x.shape) for x in inp),
+        )
+        return _cost_of(step, (carry, inp), sh, mesh, n_dev)
+    dh = st.s_head_dim
+    carry = tuple(
+        jax.ShapeDtypeStruct((b, h, dh), jnp.float32) for _ in range(4)
+    )
+    wx = jax.ShapeDtypeStruct((b, h, 4 * dh), jnp.float32)
+    r = jax.ShapeDtypeStruct((h, dh, 4 * dh), jnp.float32)
+
+    def step(c, i, rr):
+        return xl._slstm_step(c, i, rr)
+
+    sh = (
+        tuple(shard_like(x.shape) for x in carry),
+        shard_like(wx.shape),
+        NamedSharding(mesh, ctx.shd.resolve((None, None, "mlp"))),
+    )
+    return _cost_of(step, (carry, wx, r), sh, mesh, n_dev)
+
+
+def _stem_head_cost(cfg, shape, mesh, ctx, pctx, quant, b, is_train, n_dev):
+    d = cfg.d_model
+    v = cfg.vocab_size
+    s = shape.seq if shape.kind != "decode" else 1
+    bb = b if is_train else shape.batch
+    emb = jax.ShapeDtypeStruct((v, d), jnp.float32 if is_train else jnp.bfloat16)
+    emb_sh = shd.resolve_with_divisibility(
+        ("vocab", "embed"), emb, pctx, mesh
+    )
+    hid = jax.ShapeDtypeStruct((bb, s, d), jnp.bfloat16)
+    hid_sh = shd.resolve_with_divisibility(("batch", "seq", "embed"), hid,
+                                           ctx.shd, mesh)
+    ids = jax.ShapeDtypeStruct((bb, s), jnp.int32)
+    ids_sh = shd.resolve_with_divisibility(("batch", "seq"), ids, ctx.shd, mesh)
+
+    if is_train:
+
+        def head(embw, hidden, labels):
+            def lf(w):
+                logits = jnp.matmul(hidden, w.astype(jnp.bfloat16).T).astype(
+                    jnp.float32
+                )
+                lse = jax.nn.logsumexp(logits, axis=-1)
+                gold = jnp.take_along_axis(
+                    logits, labels[..., None], axis=-1
+                )[..., 0]
+                return jnp.mean(lse - gold)
+
+            return jax.value_and_grad(lf)(embw)
+
+        return _cost_of(head, (emb, hid, ids), (emb_sh, hid_sh, ids_sh),
+                        mesh, n_dev)
+
+    def head_i(embw, hidden, idx):
+        x = jnp.take(embw.astype(jnp.bfloat16), idx, axis=0)
+        logits = jnp.matmul(
+            hidden[:, -1].astype(jnp.bfloat16), embw.astype(jnp.bfloat16).T
+        )
+        return jnp.argmax(logits, -1), x
+
+    return _cost_of(head_i, (emb, hid, ids), (emb_sh, hid_sh, ids_sh),
+                    mesh, n_dev)
+
+
+def _optimizer_cost(cfg, mesh, pctx, n_dev):
+    from repro.launch import steps as steps_mod
+
+    pstruct, specs = steps_mod.param_structs(cfg)
+    p_shard = shd.resolve_with_divisibility(specs, pstruct, pctx, mesh)
+    ostruct = jax.eval_shape(adamw.init, pstruct)
+    o_shard = adamw.OptState(
+        step=NamedSharding(mesh, P()), m=p_shard, v=p_shard
+    )
+    ocfg = adamw.AdamWConfig()
+
+    def opt(params, grads, state):
+        return adamw.apply(ocfg, params, grads, state)
+
+    return _cost_of(opt, (pstruct, pstruct, ostruct),
+                    (p_shard, p_shard, o_shard), mesh, n_dev)
+
+
+def _weight_quant_cost(cfg, mesh, pctx, n_dev):
+    """Once-per-step weight fake-quant (sharded, local)."""
+    from repro.launch import steps as steps_mod
+    from repro.layers.common import quantize_weights_tree
+
+    pstruct, specs = steps_mod.param_structs(cfg)
+    p_shard = shd.resolve_with_divisibility(specs, pstruct, pctx, mesh)
+    return _cost_of(quantize_weights_tree, (pstruct,), (p_shard,), mesh, n_dev)

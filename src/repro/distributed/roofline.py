@@ -1,0 +1,177 @@
+"""Roofline-term extraction from compiled XLA artifacts.
+
+compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+memory term     = HLO_bytes / (chips * HBM_bw)
+collective term = collective wire bytes / link_bw   (per-chip)
+
+Hardware constants: TPU v5e-class — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (per the assignment brief).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2,
+    "f32": 4, "f64": 8, "c64": 8, "c128": 16, "u4": 1, "s4": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum bytes over every 'dtype[dims]' in a (possibly tuple) shape."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = re.search(r"replica_groups=\{\{([0-9,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[([0-9,]+)\]<=", line)
+    if m:
+        dims = [int(x) for x in m.group(1).split(",")]
+        return dims[-1] if dims else default
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    wire_bytes: float = 0.0  # per-device bytes on ICI (ring model)
+    by_kind: dict = dataclasses.field(default_factory=dict)
+    count: int = 0
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> CollectiveStats:
+    """Scan post-partitioning HLO for collective ops and estimate the
+    per-device wire traffic with a ring model:
+      all-reduce: 2*B*(n-1)/n  (B = result bytes)
+      all-gather: B*(n-1)/n    (B = result = full gathered bytes)
+      reduce-scatter: B*(n-1)  (B = result = per-shard bytes)
+      all-to-all: B*(n-1)/n
+      collective-permute: B
+    """
+    st = CollectiveStats()
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+([a-z\-]+)", ls)
+        if not m:
+            continue
+        op = m.group(2)
+        kind = None
+        for c in _COLLECTIVES:
+            if op == c or op == c + "-start":
+                kind = c
+                break
+        if kind is None:
+            continue
+        b = _shape_bytes(m.group(1))
+        n = max(_group_size(ls, n_devices), 1)
+        if kind == "all-reduce":
+            wire = 2.0 * b * (n - 1) / n
+        elif kind == "all-gather":
+            wire = b * (n - 1) / n
+        elif kind == "reduce-scatter":
+            wire = b * (n - 1)
+        elif kind == "all-to-all":
+            wire = b * (n - 1) / n
+        else:  # collective-permute
+            wire = float(b)
+        st.wire_bytes += wire
+        k = st.by_kind.setdefault(kind, [0, 0.0])
+        k[0] += 1
+        k[1] += wire
+        st.count += 1
+    return st
+
+
+def roofline_terms(
+    cost: dict, collectives: CollectiveStats, n_devices: int
+) -> dict:
+    """cost: compiled.cost_analysis() (per-device, post-partition)."""
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    t_compute = flops / PEAK_FLOPS
+    t_memory = byts / HBM_BW
+    t_coll = collectives.wire_bytes / LINK_BW
+    dom = max(
+        ("compute", t_compute), ("memory", t_memory), ("collective", t_coll),
+        key=lambda kv: kv[1],
+    )[0]
+    total = max(t_compute, t_memory, t_coll)
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dom,
+        "hlo_flops_per_dev": flops,
+        "hlo_bytes_per_dev": byts,
+        "collective_wire_bytes_per_dev": collectives.wire_bytes,
+        "collective_by_kind": {k: {"count": v[0], "wire_bytes": v[1]}
+                               for k, v in collectives.by_kind.items()},
+        "roofline_fraction": (t_compute / total) if total > 0 else 0.0,
+    }
+
+
+def model_flops(cfg, shape, n_tokens_override=None) -> float:
+    """MODEL_FLOPS: 6*N*D for training, 2*N_active*D for inference (global,
+    D = tokens processed per step)."""
+    n_active = active_params(cfg)
+    if shape.kind == "train":
+        d = shape.batch * shape.seq
+        return 6.0 * n_active * d
+    if shape.kind == "prefill":
+        d = shape.batch * shape.seq
+        return 2.0 * n_active * d
+    d = shape.batch * 1  # decode: one token per sequence
+    return 2.0 * n_active * d
+
+
+def active_params(cfg) -> float:
+    """Active parameter count (MoE counts top_k experts only)."""
+    d, ff, v, L = cfg.d_model, cfg.d_ff, cfg.vocab_size, cfg.n_layers
+    hd = cfg.hd
+    attn = d * cfg.n_heads * hd + 2 * d * cfg.n_kv_heads * hd + cfg.n_heads * hd * d
+    glu = cfg.ffn_kind in ("swiglu", "geglu")
+    ffp = d * ff * (3 if glu else 2)
+    total = 0.0
+    if cfg.family in ("dense", "audio", "vlm"):
+        total = L * (attn + ffp)
+    elif cfg.family == "moe":
+        total = L * (attn + cfg.top_k * ffp + d * cfg.n_experts)
+    elif cfg.family == "hybrid":
+        di = 2 * d
+        gn = cfg.ssm_state
+        h = di // cfg.ssm_head_dim
+        mamba = d * (2 * di + 2 * gn + h) + di * d
+        shared = (2 * d) * d + attn + ffp + d * d
+        n_shared = L // max(cfg.shared_attn_every, 1)
+        total = L * mamba + n_shared * shared
+    elif cfg.family == "ssm":
+        di = int(d * 2.0)
+        mlstm = d * 2 * di + 3 * di * di + di * d
+        slstm = d * 4 * d + 4 * d * (d // cfg.n_heads) + int(d * 4 / 3) * 2 * d + int(d * 4 / 3) * d
+        n_s = len(cfg.slstm_at)
+        total = (L - n_s) * mlstm + n_s * slstm
+    total += v * d * (1 if cfg.tie_embeddings else 2)
+    return total

@@ -1,0 +1,145 @@
+"""Logical-axis sharding rules: per-(arch, mesh, mode) rule tables and
+spec-tree -> NamedSharding-tree resolution (MaxText-style)."""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.layers.common import DEFAULT_RULES, ShardingCtx
+from repro.models.lm import ArchConfig
+
+
+def make_rules(cfg: ArchConfig, mesh: Mesh, mode: str = "train",
+               batch_size: int | None = None) -> dict:
+    """mode: train | prefill | decode."""
+    axes = mesh.axis_names
+    mdl = mesh.shape["model"] if "model" in axes else 1
+    model = "model" if "model" in axes else None
+    data_axes = tuple(a for a in ("pod", "data") if a in axes)
+
+    div = lambda n: model if (n % mdl == 0 and n >= mdl) else None
+    heads_shardable = cfg.n_heads % mdl == 0 and cfg.n_heads >= mdl
+
+    rules = dict(DEFAULT_RULES)
+    rules.update(
+        batch=data_axes,
+        seq=None,
+        embed=None,
+        layers=None,
+        vocab=div(cfg.vocab_size),
+        qkv_fused=div(cfg.n_heads * cfg.hd),
+        kv_fused=div(cfg.n_kv_heads * cfg.hd),
+        mlp=model,
+        heads=model if heads_shardable else None,
+        heads_g=None,
+        head_dim=None,
+        kv_heads=div(cfg.n_kv_heads),
+        experts=model if cfg.moe_shard == "ep" else None,
+        expert_mlp=model if cfg.moe_shard == "tp" else None,
+        exp_group=data_axes,  # grouped MoE dispatch (per DP shard)
+        exp_cap=None,
+        kv_seq=None,
+        cache_seq=None,
+        state_heads=model,  # SSM/xLSTM state heads (divisibility-gated)
+    )
+    if mode == "decode":
+        # flash-decoding: shard the resident KV cache's sequence axis over
+        # `model` (+`data` when the batch is too small to fill it); q_len
+        # is 1 and XLA inserts the partial-softmax combines.
+        cache_axes = (
+            ("data", "model") if batch_size is not None and batch_size < 16
+            else model
+        )
+        rules.update(kv_seq=model, cache_seq=cache_axes, heads=None,
+                     kv_heads=None)
+    elif mode == "prefill":
+        rules.update(cache_seq=model)
+        if not heads_shardable:
+            rules.update(kv_seq=model)
+    elif not heads_shardable:
+        # sequence-parallel attention for head counts not divisible by TP
+        rules.update(kv_seq=model)
+    return rules
+
+
+def make_ctx(cfg: ArchConfig, mesh: Mesh | None, mode: str = "train",
+             batch_size: int | None = None) -> ShardingCtx:
+    if mesh is None:
+        return ShardingCtx()
+    return ShardingCtx(mesh=mesh, rules=make_rules(cfg, mesh, mode, batch_size))
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, tuple) and all(
+        isinstance(a, (str, type(None))) for a in x
+    )
+
+
+def resolve_tree(specs, ctx: ShardingCtx, mesh: Mesh):
+    """Logical-axis spec tree -> NamedSharding tree."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, ctx.resolve(s)),
+        specs,
+        is_leaf=_is_spec,
+    )
+
+
+def opt_state_specs(param_specs, cfg: ArchConfig, mesh: Mesh, zero1: bool = True):
+    """Adam m/v logical specs: same as params, plus ZeRO-1 style sharding
+    of otherwise-replicated leading axes over the data axis (via the
+    dedicated 'zero' logical axis name)."""
+    if not zero1:
+        return param_specs
+
+    def z(spec):
+        if not _is_spec(spec):
+            return spec
+        # replace the first usually-unsharded axis with the 'zero' axis
+        out = list(spec)
+        for i, a in enumerate(out):
+            if a in (None, "embed"):
+                out[i] = "zero"
+                break
+        return tuple(out)
+
+    return jax.tree.map(z, param_specs, is_leaf=_is_spec)
+
+
+def zero_rules(rules: dict, mesh: Mesh, enabled: bool = True) -> dict:
+    r = dict(rules)
+    r["zero"] = "data" if (enabled and "data" in mesh.axis_names) else None
+    return r
+
+
+def resolve_with_divisibility(specs, shapes, ctx: ShardingCtx, mesh: Mesh):
+    """Resolve specs -> NamedSharding, dropping mesh axes whose size does
+    not divide the corresponding dim (needed for ZeRO on odd shapes)."""
+
+    from repro.layers.common import DEFAULT_RULES as DR
+
+    def one(spec, sds):
+        names = []
+        used: set = set()
+        for i, ax in enumerate(spec):
+            r = ctx.rules.get(ax, DR.get(ax)) if ax else None
+            cand = r if isinstance(r, (list, tuple)) else ((r,) if r else ())
+            picked = []
+            sz = 1
+            for a in cand:
+                if a is None or a not in mesh.axis_names or a in used:
+                    continue
+                if sds.shape[i] % (sz * mesh.shape[a]) != 0:
+                    continue  # dropped axes must NOT consume `used`
+                picked.append(a)
+                sz *= mesh.shape[a]
+            used.update(picked)
+            if not picked:
+                names.append(None)
+            elif len(picked) == 1 and not isinstance(r, (list, tuple)):
+                names.append(picked[0])
+            else:
+                names.append(tuple(picked))
+        return NamedSharding(mesh, P(*names))
+
+    return jax.tree.map(one, specs, shapes, is_leaf=_is_spec)

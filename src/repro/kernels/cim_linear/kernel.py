@@ -1,0 +1,109 @@
+"""Analog CTT-CIM forward Pallas kernel: per-32-block integer partial
+sums, exponent alignment to the calibrated target E_N under a CM-bit
+mirror window (underflow-to-zero below, shift-clamp above), Row-Hist
+2-pass merge, and n-bit ADC quantization of each (pass, column) sum.
+
+Inputs are the INT5 signed code domain (codes = 2*fp4 in [-12, 12]) plus
+per-block exponents, exactly the paper's eq. (1)-(3) datapath. The block
+dot products are exact in f32 (|S| <= 32*144), so the MXU carries the
+"analog" accumulation.
+
+Grid (nm, nn); K fully resident per tile (the CTT array is
+weight-stationary along K: hidden x hidden macros, paper §4.3).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _exp2i(e: jax.Array) -> jax.Array:
+    """Exact 2^e via IEEE exponent-field construction (e in [-126, 127])."""
+    return jax.lax.bitcast_convert_type(
+        (jnp.clip(e, -126, 127) + 127).astype(jnp.int32) << 23, jnp.float32
+    )
+
+
+def _kernel(
+    xc_ref, xe_ref, wc_ref, we_ref, cal_ref, o_ref,
+    *, nb: int, cm: int, adc_bits: int | None, two_pass: bool,
+):
+    e_n = cal_ref[0, 0].astype(jnp.int32)
+    fs = cal_ref[0, 1]
+
+    def body(b, carry):
+        a1, a2 = carry
+        xb = xc_ref[:, pl.ds(b * 32, 32)].astype(jnp.float32)
+        wb = wc_ref[pl.ds(b * 32, 32), :].astype(jnp.float32)
+        s = jax.lax.dot(xb, wb, preferred_element_type=jnp.float32)
+        ex = xe_ref[:, pl.ds(b, 1)].astype(jnp.int32)  # [bm, 1]
+        ew = we_ref[pl.ds(b, 1), :].astype(jnp.int32)  # [1, bn]
+        sh = ex + ew - e_n
+        under1 = sh < -cm
+        a1 += jnp.where(under1, 0.0, s * _exp2i(jnp.clip(sh, -cm, 0)))
+        if two_pass:
+            sh2 = sh + cm
+            a2 += jnp.where(
+                under1 & (sh2 >= -cm), s * _exp2i(jnp.clip(sh2, -cm, 0)), 0.0
+            )
+        return a1, a2
+
+    zero = jnp.zeros(o_ref.shape, jnp.float32)
+    a1, a2 = jax.lax.fori_loop(0, nb, body, (zero, zero))
+
+    def adc(c):
+        if adc_bits is None:
+            return c
+        half = 2.0 ** (adc_bits - 1)
+        delta = fs / half
+        return jnp.clip(jnp.round(c / delta), -half, half - 1.0) * delta
+
+    y = adc(a1) * _exp2i(e_n) * 0.25
+    if two_pass:
+        y += adc(a2) * _exp2i(e_n - cm) * 0.25
+    o_ref[...] = y
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bm", "bn", "cm", "adc_bits", "two_pass", "interpret"),
+)
+def cim_linear_kernel(
+    x_codes: jax.Array,  # int8 [M, K]
+    x_exps: jax.Array,  # int8 [M, K//32]
+    w_codes: jax.Array,  # int8 [K, N]
+    w_exps: jax.Array,  # int8 [K//32, N]
+    calib: jax.Array,  # f32 [1, 2] = (E_N, adc_fs)
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    cm: int = 3,
+    adc_bits: int | None = 10,
+    two_pass: bool = True,
+    interpret: bool = True,
+):
+    m, k = x_codes.shape
+    n = w_codes.shape[1]
+    nb = k // 32
+    bm, bn = min(bm, m), min(bn, n)
+    assert m % bm == 0 and n % bn == 0 and k % 32 == 0
+    return pl.pallas_call(
+        functools.partial(
+            _kernel, nb=nb, cm=cm, adc_bits=adc_bits, two_pass=two_pass
+        ),
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, nb), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((nb, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, 2), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x_codes, x_exps, w_codes, w_exps, calib)

@@ -1,0 +1,19 @@
+"""Oracle for the CIM kernel: the pure-jnp analog datapath simulation."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core import cim as cimlib
+from repro.core import mx as mxlib
+
+
+def cim_linear_ref(
+    x: jax.Array,
+    w: mxlib.MXW,
+    calib: cimlib.LayerCalib,
+    cfg: cimlib.CIMConfig | None = None,
+) -> jax.Array:
+    cfg = cfg or cimlib.CIMConfig()
+    y, _ = cimlib.cim_linear(x, w, cfg, calib)
+    return y

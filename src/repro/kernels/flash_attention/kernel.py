@@ -1,0 +1,131 @@
+"""FlashAttention-style Pallas kernel: tiled online softmax with running
+max/sum and deferred normalization — the paper's §4.4 digital attention
+stage (64-wide pipelined softmax lane + deferred division) mapped onto TPU
+VMEM tiling. Supports causal and sliding-window masks and GQA via KV-head
+index mapping (no repeated-KV materialization).
+
+Layout: q [BH, Sq, D], k/v [BKV, Sk, D] with BH = B*H, BKV = B*Hkv.
+Grid (BH, nq, nk), k innermost; f32 scratch acc/m/l.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+    *, bq: int, bk: int, nk: int, scale: float, causal: bool, window: int,
+    q_offset: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    first_q = qi * bq + q_offset  # absolute position of this q tile's row 0
+    first_k = ki * bk
+
+    def compute():
+        q_pos = first_q + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = first_k + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jax.lax.dot_general(
+            q_ref[0].astype(jnp.float32),
+            k_ref[0].astype(jnp.float32),
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale  # [bq, bk]
+        mask = jnp.ones((bq, bk), bool)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window > 0:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot(
+            p, v_ref[0].astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        m_ref[...] = m_new
+
+    # tile skipping: fully-masked (future, or older-than-window) KV tiles
+    live = jnp.bool_(True)
+    if causal:
+        live &= first_k <= first_q + bq - 1
+    if window > 0:
+        live &= first_k + bk - 1 > first_q - window
+    pl.when(live)(compute)
+
+    @pl.when(ki == nk - 1)
+    def _store():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "groups", "bq", "bk", "causal", "window", "q_offset", "interpret"
+    ),
+)
+def flash_attention_kernel(
+    q: jax.Array,  # [BH, Sq, D]
+    k: jax.Array,  # [BKV, Sk, D]
+    v: jax.Array,
+    *,
+    groups: int = 1,  # H // Hkv; BH = BKV * groups
+    bq: int = 128,
+    bk: int = 128,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,  # absolute position of q[0] (decode/prefill chunks)
+    interpret: bool = True,
+):
+    bh, sq, d = q.shape
+    bkv, sk, _ = k.shape
+    assert bh == bkv * groups
+    bq = min(bq, sq)
+    bk = min(bk, sk)
+    while sq % bq:
+        bq //= 2
+    while sk % bk:
+        bk //= 2
+    nq, nk = sq // bq, sk // bk
+    scale = d**-0.5
+    return pl.pallas_call(
+        functools.partial(
+            _kernel, bq=bq, bk=bk, nk=nk, scale=scale, causal=causal,
+            window=window, q_offset=q_offset,
+        ),
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda h, qi, ki: (h, qi, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, qi, ki, g=groups: (h // g, ki, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, qi, ki, g=groups: (h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda h, qi, ki: (h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,47 @@
+"""Jitted public wrapper for the MXFP4 dequant-matmul kernel: handles
+arbitrary leading batch dims, non-aligned shapes (pad), and the
+CPU-interpret / TPU-compiled switch."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mxfp4_matmul.kernel import mxfp4_matmul_kernel
+
+
+def mxfp4_matmul(
+    x: jax.Array,
+    codes: jax.Array,
+    exps: jax.Array,
+    *,
+    block: tuple[int, int, int] = (128, 128, 128),
+    interpret: bool = True,
+) -> jax.Array:
+    """x [..., K] @ dequant(codes [K//2, N], exps [K//32, N]) -> [..., N]."""
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    n = codes.shape[1]
+    xm = x.reshape(-1, k)
+    m = xm.shape[0]
+    bm, bn, bk = block
+    pm = (-m) % min(bm, max(m, 1))
+    if pm:
+        xm = jnp.pad(xm, ((0, pm), (0, 0)))
+    # shrink blocks to fit small shapes
+    bm = min(bm, xm.shape[0])
+    bn = min(bn, n)
+    bk = min(bk, k)
+    while xm.shape[0] % bm:
+        bm //= 2
+    while n % bn:
+        bn //= 2
+    while k % bk or bk % 32:
+        bk //= 2
+    out = mxfp4_matmul_kernel(
+        xm, codes, exps, bm=bm, bn=bn, bk=max(bk, 32),
+        out_dtype=jnp.bfloat16, interpret=interpret,
+    )
+    if pm:
+        out = out[:m]
+    return out.reshape(lead + (n,))

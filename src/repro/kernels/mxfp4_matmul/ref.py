@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the fused MXFP4 dequant-matmul kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mx as mxlib
+
+
+def dequant_ref(codes: jax.Array, exps: jax.Array) -> jax.Array:
+    """packed uint8 [K//2, N] + biased uint8 [K//32, N] -> f32 [K, N]."""
+    c = mxlib.unpack_codes(codes.T).T.astype(jnp.float32)  # [K, N]
+    e = mxlib.exps_from_biased(exps)
+    scale = mxlib.exp2i(e)  # [K//32, N]
+    k, n = c.shape
+    return (c.reshape(k // 32, 32, n) * (0.5 * scale)[:, None, :]).reshape(k, n)
+
+
+def mxfp4_matmul_ref(
+    x: jax.Array, codes: jax.Array, exps: jax.Array, out_dtype=jnp.bfloat16
+) -> jax.Array:
+    w = dequant_ref(codes, exps)
+    return jnp.matmul(
+        x.astype(jnp.float32), w, preferred_element_type=jnp.float32
+    ).astype(out_dtype)

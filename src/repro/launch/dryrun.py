@@ -1,0 +1,168 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell on
+the production mesh with ShapeDtypeStruct inputs (no allocation), print
+memory/cost analysis, and derive the roofline terms.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-1b \
+      --shape train_4k --mesh single [--out results.json]
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out dryrun/
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro import configs as C  # noqa: E402
+from repro.distributed import roofline as rl  # noqa: E402
+from repro.launch import steps as steps_mod  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    quant: str | None = None,
+    verbose: bool = True,
+    overrides: dict | None = None,
+    blockwise: bool | None = None,
+) -> dict:
+    if blockwise is None:
+        blockwise = not multi_pod  # roofline table is single-pod only
+    import dataclasses
+
+    cfg = C.ARCHS[arch]
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = C.SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+
+    kw = {}
+    if quant:
+        kw["quant"] = quant
+    t0 = time.time()
+    with mesh:
+        bundle = steps_mod.make_step(cfg, mesh, shape, **kw)
+        lowered = bundle.fn.lower(*bundle.args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = rl.parse_collectives(hlo, n_dev)
+    whole = rl.roofline_terms(cost, coll, n_dev)
+    # Trip-count-exact roofline from per-block compiles (XLA counts scan
+    # bodies once — see distributed/blockwise.py). Single-pod only.
+    if blockwise:
+        from repro.distributed import blockwise as bw
+
+        terms = bw.analyze_cell(cfg, shape, mesh, quant=quant)
+        terms["wholegraph"] = {
+            k: whole[k]
+            for k in ("t_compute_s", "t_memory_s", "t_collective_s")
+        }
+    else:
+        terms = whole
+    mflops = rl.model_flops(cfg, shape)
+    hlo_global = terms["hlo_flops_per_dev"] * n_dev
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": n_dev,
+        "quant": kw.get("quant", "default"),
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "peak_bytes": mem.temp_size_in_bytes
+            + mem.argument_size_in_bytes,
+            "fits_16GB": (mem.temp_size_in_bytes + mem.argument_size_in_bytes)
+            < 16e9,
+        },
+        "model_flops_global": mflops,
+        "useful_flops_ratio": mflops / hlo_global if hlo_global else 0.0,
+        **terms,
+    }
+    if verbose:
+        print(f"== {arch} x {shape_name} x {result['mesh']} "
+              f"(quant={result['quant']}) ==")
+        print(f"  lower {t_lower:.0f}s compile {t_compile:.0f}s")
+        print(f"  memory/dev: args {mem.argument_size_in_bytes/2**30:.2f} GiB"
+              f" + temp {mem.temp_size_in_bytes/2**30:.2f} GiB"
+              f" -> fits16GB={result['memory']['fits_16GB']}")
+        print(f"  flops/dev {terms['hlo_flops_per_dev']:.3e}"
+              f"  bytes/dev {terms['hlo_bytes_per_dev']:.3e}"
+              f"  coll bytes/dev {terms['collective_wire_bytes_per_dev']:.3e}")
+        print(f"  t_compute {terms['t_compute_s']*1e3:.2f} ms"
+              f"  t_memory {terms['t_memory_s']*1e3:.2f} ms"
+              f"  t_coll {terms['t_collective_s']*1e3:.2f} ms"
+              f"  dominant={terms['dominant']}"
+              f"  MODEL/HLO={result['useful_flops_ratio']:.2f}")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--quant", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for a, s in C.all_cells():
+            meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+            for m in meshes:
+                cells.append((a, s, m == "multi"))
+    else:
+        meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+        shapes = (
+            [args.shape] if args.shape else C.applicable_shapes(C.ARCHS[args.arch])
+        )
+        for s in shapes:
+            for m in meshes:
+                cells.append((args.arch, s, m == "multi"))
+
+    results = []
+    for a, s, mp in cells:
+        try:
+            results.append(run_cell(a, s, mp, quant=args.quant))
+        except Exception as e:  # noqa: BLE001 — sweep must survive one bad cell
+            traceback.print_exc()
+            results.append({
+                "arch": a, "shape": s,
+                "mesh": "2x16x16" if mp else "16x16",
+                "error": f"{type(e).__name__}: {e}",
+            })
+        if args.out:
+            os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+    ok = sum(1 for r in results if "error" not in r)
+    print(f"\n{ok}/{len(results)} cells compiled successfully")
+    if ok < len(results):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,287 @@
+"""pjit step builders: train / prefill / decode, with sharding trees
+resolved from logical-axis rules. Shared by the launcher, the dry-run and
+the trainer runtime."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import configs as C
+from repro.distributed import sharding as shd
+from repro.layers.common import (
+    RunCtx,
+    _dequant_packed,
+    convert_params_mxfp4,
+    convert_specs_mxfp4,
+    quantize_weights_tree,
+)
+from repro.models import lm
+from repro.optim import adamw
+
+
+@dataclasses.dataclass(frozen=True)
+class StepBundle:
+    fn: Any  # jitted step function
+    args: tuple  # ShapeDtypeStruct pytree args to lower with
+    ctx: RunCtx
+
+
+def _replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+def param_structs(cfg, serve_quant: bool = False):
+    """(params ShapeDtypeStruct tree, logical specs tree) — no allocation.
+    Specs (string tuples) are captured by side effect since eval_shape
+    outputs must be arrays."""
+    box = {}
+
+    def only_params():
+        p, s = lm.init_model(jax.random.PRNGKey(0), cfg)
+        box["specs"] = s
+        return p
+
+    pstruct = jax.eval_shape(only_params)
+    specs = box["specs"]
+    if serve_quant:
+        qstruct = jax.eval_shape(convert_params_mxfp4, pstruct)
+        qspecs = convert_specs_mxfp4(specs, pstruct)
+        return qstruct, qspecs
+    return pstruct, specs
+
+
+def batch_shardings(batch_struct, mesh, ctx):
+    ax = {
+        "ids": ("batch", "seq"),
+        "labels": ("batch", "seq"),
+        "loss_mask": ("batch", "seq"),
+        "emb": ("batch", "seq", "embed"),
+        "vis_emb": ("batch", "seq", "embed"),
+        "positions": ("batch", "seq"),
+        "pos": (),
+    }
+    return shd.resolve_with_divisibility(
+        {k: ax[k][: v.ndim] for k, v in batch_struct.items()},
+        batch_struct, ctx, mesh,
+    )
+
+
+def _data_size(mesh) -> int:
+    n = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return n
+
+
+def pick_microbatches(mesh, shape: C.Shape, target_tokens: int = 8192) -> int:
+    """Gradient-accumulation factor: split the global batch until
+    tokens-per-device-per-microbatch <= target (activation memory bound)."""
+    dsz = _data_size(mesh)
+    k = 1
+    while (
+        shape.seq * shape.batch // (dsz * k) > target_tokens
+        and (shape.batch // (2 * k)) % dsz == 0
+        and shape.batch // (2 * k) >= dsz
+    ):
+        k *= 2
+    return k
+
+
+def param_rules(rules: dict, mesh, fsdp: bool = True) -> dict:
+    """Parameter *storage* rules: FSDP — shard the (usually replicated)
+    'embed' axis of every weight over the data axes. Compute gathers one
+    scanned layer at a time; backward reduce-scatters grads (ZeRO-3)."""
+    r = dict(rules)
+    if fsdp:
+        r["embed"] = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return r
+
+
+def make_train_step(
+    cfg,
+    mesh: Mesh,
+    shape: C.Shape,
+    opt_cfg: adamw.AdamWConfig | None = None,
+    quant: str = "mxfp4_ste",
+    zero1: bool = True,
+    fsdp: bool = True,
+    microbatches: int | None = None,
+) -> StepBundle:
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+    prequant = quant == "mxfp4_ste"
+    if prequant:
+        quant = "mxfp4_ste_prequant"
+    rules = shd.make_rules(cfg, mesh, "train")
+    rules = shd.zero_rules(rules, mesh, enabled=zero1)
+    ctx = RunCtx(shd=shd.ShardingCtx(mesh=mesh, rules=rules), quant=quant)
+    pctx = shd.ShardingCtx(mesh=mesh, rules=param_rules(rules, mesh, fsdp))
+
+    pstruct, specs = param_structs(cfg)
+    ostruct = jax.eval_shape(adamw.init, pstruct)
+    bstruct = C.input_specs(cfg, shape)
+    k_micro = microbatches or pick_microbatches(mesh, shape)
+
+    p_shard = shd.resolve_with_divisibility(specs, pstruct, pctx, mesh)
+    ospecs = shd.opt_state_specs(specs, cfg, mesh, zero1=zero1)
+    m_shard = shd.resolve_with_divisibility(ospecs, pstruct, pctx, mesh)
+    o_shard = adamw.OptState(step=_replicated(mesh), m=m_shard, v=m_shard)
+    b_shard = batch_shardings(bstruct, mesh, ctx.shd)
+    met_shard = {"loss": _replicated(mesh), "grad_norm": _replicated(mesh),
+                 "lr": _replicated(mesh)}
+
+    def loss_fn(p, mb):
+        return lm.lm_loss(p, cfg, ctx, mb)
+
+    def train_step(params, opt_state, batch):
+        if prequant:
+            cparams, qvjp = jax.vjp(quantize_weights_tree, params)
+        else:
+            cparams, qvjp = params, None
+        params, outer_params = cparams, params
+        if k_micro == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            mb_batch = jax.tree.map(
+                lambda x: x.reshape(
+                    (k_micro, x.shape[0] // k_micro) + x.shape[1:]
+                ),
+                batch,
+            )
+
+            def micro(carry, mb):
+                gs, ls = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                gs = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gs, g
+                )
+                return (gs, ls + l), None
+
+            init = (
+                jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params
+                ),
+                jnp.float32(0.0),
+            )
+            (grads, loss), _ = jax.lax.scan(micro, init, mb_batch)
+            grads = jax.tree.map(lambda g: g / k_micro, grads)
+            loss = loss / k_micro
+        params = outer_params
+        if qvjp is not None:  # STE back through the step-boundary quant
+            grads = qvjp(jax.tree.map(lambda g, p: g.astype(p.dtype),
+                                      grads, cparams))[0]
+        new_params, new_state, metrics = adamw.apply(
+            opt_cfg, params, grads, opt_state
+        )
+        metrics["loss"] = loss
+        return new_params, new_state, metrics
+
+    fn = jax.jit(
+        train_step,
+        in_shardings=(p_shard, o_shard, b_shard),
+        out_shardings=(p_shard, o_shard, met_shard),
+        donate_argnums=(0, 1),
+    )
+    return StepBundle(fn=fn, args=(pstruct, ostruct, bstruct), ctx=ctx)
+
+
+def _head_logits(cfg, params, last_hidden):
+    if cfg.tie_embeddings:
+        return jnp.matmul(
+            last_hidden, params["embed"]["emb"].astype(jnp.bfloat16).T
+        )
+    hp = params["lm_head"]
+    if "codes" in hp:
+        return jnp.matmul(
+            last_hidden.astype(jnp.bfloat16),
+            _dequant_packed(hp["codes"], hp["exps"]),
+        )
+    return jnp.matmul(last_hidden, hp["w"].astype(jnp.bfloat16))
+
+
+def make_prefill_step(
+    cfg,
+    mesh: Mesh,
+    shape: C.Shape,
+    quant: str = "mxfp4_wonly",
+    with_cache: bool = True,
+) -> StepBundle:
+    ctx = RunCtx(
+        shd=shd.make_ctx(cfg, mesh, "prefill"), quant=quant, decode=False
+    )
+    pstruct, specs = param_structs(cfg, serve_quant=quant == "mxfp4_wonly")
+    bstruct = C.input_specs(cfg, shape)
+    p_shard = shd.resolve_with_divisibility(specs, pstruct, ctx.shd, mesh)
+    b_shard = batch_shardings(bstruct, mesh, ctx.shd)
+    with_c = with_cache and cfg.supports_decode
+    cache_len = shape.seq
+
+    def prefill_step(params, batch):
+        caches = (
+            lm.init_cache(cfg, shape.batch, cache_len) if with_c else None
+        )
+        hidden, caches = lm.forward(
+            params, cfg, ctx, batch, caches=caches, return_hidden=True
+        )
+        logits = _head_logits(cfg, params, hidden[:, -1])
+        ids = jnp.argmax(logits.astype(jnp.float32), axis=-1)
+        return (ids, caches) if with_c else (ids, ())
+
+    fn = jax.jit(prefill_step, in_shardings=(p_shard, b_shard))
+    return StepBundle(fn=fn, args=(pstruct, bstruct), ctx=ctx)
+
+
+def make_decode_step(
+    cfg,
+    mesh: Mesh,
+    shape: C.Shape,
+    quant: str = "mxfp4_wonly",
+) -> StepBundle:
+    ctx = RunCtx(
+        shd=shd.make_ctx(cfg, mesh, "decode", batch_size=shape.batch),
+        quant=quant, decode=True
+    )
+    pstruct, specs = param_structs(cfg, serve_quant=quant == "mxfp4_wonly")
+    p_shard = shd.resolve_with_divisibility(specs, pstruct, ctx.shd, mesh)
+
+    cstruct = jax.eval_shape(
+        lambda: lm.init_cache(cfg, shape.batch, shape.seq)
+    )
+    cspecs = lm.cache_specs(cfg)
+    c_shard = shd.resolve_with_divisibility(cspecs, cstruct, ctx.shd, mesh)
+    inp = C.input_specs(cfg, shape)
+    ids_in = shd.resolve_with_divisibility(
+        ("batch", "seq"), inp["ids"], ctx.shd, mesh
+    )
+    ids_out = shd.resolve_with_divisibility(
+        ("batch",), jax.ShapeDtypeStruct((shape.batch,), jnp.int32),
+        ctx.shd, mesh,
+    )
+
+    def serve_step(params, caches, ids, pos):
+        logits, new_caches = lm.decode_step(params, cfg, ctx, ids, pos, caches)
+        next_ids = jnp.argmax(logits.astype(jnp.float32), axis=-1)
+        return next_ids.astype(jnp.int32), new_caches
+
+    fn = jax.jit(
+        serve_step,
+        in_shardings=(p_shard, c_shard, ids_in, _replicated(mesh)),
+        out_shardings=(ids_out, c_shard),
+        donate_argnums=(1,),
+    )
+    return StepBundle(
+        fn=fn, args=(pstruct, cstruct, inp["ids"], inp["pos"]), ctx=ctx
+    )
+
+
+def make_step(cfg, mesh, shape: C.Shape, **kw) -> StepBundle:
+    if shape.kind == "train":
+        return make_train_step(cfg, mesh, shape, **kw)
+    if shape.kind == "prefill":
+        return make_prefill_step(cfg, mesh, shape, **kw)
+    return make_decode_step(cfg, mesh, shape, **kw)

@@ -1,0 +1,272 @@
+"""Grouped-query attention with RoPE/M-RoPE, causal/sliding-window/
+local:global masking, KV-cache decode, and a memory-efficient
+online-softmax (FlashAttention-style) path for long sequences.
+
+This is the model-level attention; the paper's digital-stage numerics
+simulator lives in ``repro.core.digital`` and the TPU kernel in
+``repro.kernels.flash_attention``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers import rope as ropelib
+from repro.layers.common import (
+    RunCtx,
+    linear_apply,
+    linear_init,
+    norm_apply,
+    norm_init,
+    rmsnorm_apply,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnStatic:
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    causal: bool = True
+    window: int = 0  # 0 = full attention; >0 = sliding window
+    rope_theta: float = 1e4
+    use_rope: bool = True
+    mrope: bool = False
+    qk_norm: bool = False
+    use_bias: bool = False
+    norm: str = "rmsnorm"
+    softmax_scale: float | None = None
+
+    @property
+    def scale(self) -> float:
+        return (
+            self.head_dim**-0.5
+            if self.softmax_scale is None
+            else self.softmax_scale
+        )
+
+
+def attn_init(key, cfg: AttnStatic):
+    ks = jax.random.split(key, 5)
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    p, s = {}, {}
+    p["ln"], s["ln"] = norm_init(cfg.norm, d)
+    p["wq"], s["wq"] = linear_init(
+        ks[0], d, h * hd, use_bias=cfg.use_bias, out_axis="qkv_fused"
+    )
+    p["wk"], s["wk"] = linear_init(
+        ks[1], d, kv * hd, use_bias=cfg.use_bias, out_axis="kv_fused"
+    )
+    p["wv"], s["wv"] = linear_init(
+        ks[2], d, kv * hd, use_bias=cfg.use_bias, out_axis="kv_fused"
+    )
+    p["wo"], s["wo"] = linear_init(
+        ks[3], h * hd, d, use_bias=cfg.use_bias, in_axis="qkv_fused",
+        out_axis="embed",
+    )
+    if cfg.qk_norm:
+        p["qn"], s["qn"] = norm_init("rmsnorm", hd)
+        p["kn"], s["kn"] = norm_init("rmsnorm", hd)
+    return p, s
+
+
+def _mask(q_pos, k_pos, causal: bool, window: int):
+    """bool [..., Sq, Sk]; True = attend."""
+    qp = q_pos[..., :, None]
+    kp = k_pos[..., None, :]
+    m = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), bool)
+    if causal:
+        m &= kp <= qp
+    if window > 0:
+        m &= kp > qp - window
+    return m
+
+
+def _dense_attn(q, k, v, q_pos, k_pos, cfg: AttnStatic, extra_mask=None):
+    """q [B,Sq,Hkv,G,Dh]; k,v [B,Sk,Hkv,Dh]."""
+    s = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", q, k, preferred_element_type=jnp.float32
+    ) * cfg.scale
+    m = _mask(q_pos, k_pos, cfg.causal, cfg.window)[:, None, None]
+    if extra_mask is not None:
+        m &= extra_mask[:, None, None]
+    s = jnp.where(m, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isfinite(s).any(-1, keepdims=True), p, 0.0)
+    return jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v)
+
+
+def _flash_attn(q, k, v, q_pos, k_pos, cfg: AttnStatic, ctx: RunCtx):
+    """Online-softmax attention, chunked over Q (lax.map) and KV (scan).
+    Compiles to compact HLO and bounds live score memory to
+    [B, qc, Hkv, G, kc]. Same tiling scheme as the Pallas kernel."""
+    b, sq, hkv, g, dh = q.shape
+    sk = k.shape[1]
+    kc = min(ctx.attn_chunk, sk)
+    qc = min(ctx.q_chunk, sq)
+    nkc = -(-sk // kc)
+    nqc = -(-sq // qc)
+    pad_k = nkc * kc - sk
+    pad_q = nqc * qc - sq
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad_k)), constant_values=-(10**9))
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad_q)))
+    kcs = k.reshape(b, nkc, kc, hkv, dh)
+    vcs = v.reshape(b, nkc, kc, hkv, dh)
+    kps = k_pos.reshape(b, nkc, kc)
+
+    def one_q_chunk(args):
+        qi, qpi = args  # [B, qc, Hkv, G, Dh], [B, qc]
+
+        def step(carry, xs):
+            m_run, den, acc = carry
+            kci, vci, kpi = xs  # [B, kc, ...]
+            s = jnp.einsum(
+                "bqhgd,bkhd->bqhgk", qi, kci,
+                preferred_element_type=jnp.float32,
+            ) * cfg.scale
+            msk = _mask(qpi, kpi, cfg.causal, cfg.window)  # [B, qc, kc]
+            s = jnp.where(msk[:, :, None, None, :], s, -jnp.inf)
+            m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(jnp.isfinite(s), p, 0.0)
+            corr = jnp.where(
+                jnp.isfinite(m_run), jnp.exp(m_run - m_safe), 0.0
+            )
+            pv = jnp.einsum("bqhgk,bkhd->bqhgd", p.astype(vci.dtype), vci)
+            acc = acc * corr[..., None].astype(acc.dtype) + pv.astype(jnp.float32)
+            den = den * corr + jnp.sum(p, axis=-1)
+            return (m_new, den, acc), None
+
+        init = (
+            jnp.full((b, qc, hkv, g), -jnp.inf, jnp.float32),
+            jnp.zeros((b, qc, hkv, g), jnp.float32),
+            jnp.zeros((b, qc, hkv, g, dh), jnp.float32),
+        )
+        (m_run, den, acc), _ = jax.lax.scan(
+            step, init, (kcs.swapaxes(0, 1), vcs.swapaxes(0, 1), kps.swapaxes(0, 1))
+        )
+        den = jnp.where(den == 0.0, 1.0, den)
+        return (acc / den[..., None]).astype(q.dtype)
+
+    qcs = q.reshape(b, nqc, qc, hkv, g, dh).swapaxes(0, 1)
+    qps = q_pos.reshape(b, nqc, qc).swapaxes(0, 1)
+    out = jax.lax.map(one_q_chunk, (qcs, qps))  # [nqc, B, qc, Hkv, G, Dh]
+    out = out.swapaxes(0, 1).reshape(b, nqc * qc, hkv, g, dh)
+    return out[:, :sq]
+
+
+def _qkv(ctx: RunCtx, cfg: AttnStatic, p: dict, x: jax.Array, positions):
+    b, s, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    q = linear_apply(ctx, p["wq"], x).reshape(b, s, h, hd)
+    k = linear_apply(ctx, p["wk"], x).reshape(b, s, kv, hd)
+    v = linear_apply(ctx, p["wv"], x).reshape(b, s, kv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm_apply(p["qn"], q)
+        k = rmsnorm_apply(p["kn"], k)
+    if cfg.use_rope:
+        if cfg.mrope:
+            mp = ropelib.text_mrope_positions(positions)
+            sec = (hd // 8, hd * 3 // 16, hd * 3 // 16)
+            q = ropelib.apply_mrope(q, mp, cfg.rope_theta, sec)
+            k = ropelib.apply_mrope(k, mp, cfg.rope_theta, sec)
+        else:
+            q = ropelib.apply_rope(q, positions, cfg.rope_theta)
+            k = ropelib.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_apply(
+    ctx: RunCtx,
+    cfg: AttnStatic,
+    p: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    cache: dict | None = None,
+    pos: jax.Array | None = None,
+):
+    """Pre-norm attention sublayer with residual.
+
+    Train/prefill: ``cache=None``, positions [B, S].
+    Decode: ``cache={'k','v'}`` ring/linear buffers, ``pos`` scalar int32
+    (current length; the new token is written at slot pos % W).
+    Returns (y, new_cache).
+    """
+    b, s, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    g = h // kv
+    xn = norm_apply(cfg.norm, p["ln"], x)
+    q, k, v = _qkv(ctx, cfg, p, xn, positions)
+    q = ctx.act(q.reshape(b, s, kv, g, hd), "batch", "seq", "kv_heads", "heads_g", "head_dim")
+
+    if cache is not None and s > 1:
+        # prefill-into-cache: attention over the fresh K/V, cache filled
+        # with the last W positions (ring convention: slot = pos % W)
+        w = cache["k"].shape[1]
+        if s < w:
+            kw = jnp.pad(k, ((0, 0), (0, w - s), (0, 0), (0, 0)))
+            vw = jnp.pad(v, ((0, 0), (0, w - s), (0, 0), (0, 0)))
+        else:
+            kw, vw = k[:, -w:], v[:, -w:]
+            roll = s % w
+            if roll:
+                kw = jnp.roll(kw, roll, axis=1)
+                vw = jnp.roll(vw, roll, axis=1)
+        new_cache = {"k": kw.astype(cache["k"].dtype),
+                     "v": vw.astype(cache["v"].dtype)}
+        k = ctx.act(k, "batch", "kv_seq", "kv_heads", "head_dim")
+        v = ctx.act(v, "batch", "kv_seq", "kv_heads", "head_dim")
+        if s <= ctx.dense_attn_max:
+            o = _dense_attn(q, k, v, positions, positions, cfg)
+        else:
+            o = _flash_attn(q, k, v, positions, positions, cfg, ctx)
+    elif cache is not None:
+        w = cache["k"].shape[1]
+        slot = pos % w
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        idx = jnp.arange(w)
+        valid = (idx <= pos) | (pos >= w)
+        sc = jnp.einsum(
+            "bqhgd,bkhd->bhgqk", q, ck, preferred_element_type=jnp.float32
+        ) * cfg.scale
+        sc = jnp.where(valid[None, None, None, None, :], sc, -jnp.inf)
+        pr = jax.nn.softmax(sc, axis=-1).astype(cv.dtype)
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", pr, cv)
+    else:
+        new_cache = None
+        k = ctx.act(k, "batch", "kv_seq", "kv_heads", "head_dim")
+        v = ctx.act(v, "batch", "kv_seq", "kv_heads", "head_dim")
+        if s <= ctx.dense_attn_max:
+            o = _dense_attn(q, k, v, positions, positions, cfg)
+        else:
+            o = _flash_attn(q, k, v, positions, positions, cfg, ctx)
+
+    o = o.reshape(b, s, h * hd)
+    y = linear_apply(ctx, p["wo"], o)
+    y = ctx.act(y, "batch", "seq", "embed")
+    return x + y.astype(x.dtype), new_cache
+
+
+def attn_cache_init(cfg: AttnStatic, batch: int, max_len: int, dtype=jnp.bfloat16):
+    w = min(cfg.window, max_len) if cfg.window > 0 else max_len
+    shape = (batch, w, cfg.n_kv, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+ATTN_CACHE_SPECS = {
+    "k": ("batch", "cache_seq", None, None),
+    "v": ("batch", "cache_seq", None, None),
+}

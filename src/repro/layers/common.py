@@ -1,0 +1,369 @@
+"""Shared layer utilities: sharding context, quantized linear, norms.
+
+Parameters are plain nested dicts of ``jax.Array``; every ``*_init``
+returns ``(params, specs)`` where ``specs`` mirrors the params tree with
+tuples of *logical* axis names (resolved to mesh axes by
+``repro.distributed.sharding``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import mx as mxlib
+
+
+# --------------------------------------------------------------- sharding
+
+DEFAULT_RULES: dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",
+    "expert_mlp": None,
+    "kv_seq": None,  # attention K/V sequence axis (SP when heads unshardable)
+    "cache_seq": None,  # resident KV-cache sequence axis (flash-decoding)
+    "state_heads": None,  # SSM/xLSTM state head axis
+    "qkv_fused": None,
+    "kv_fused": None,
+    "heads_g": None,
+    "exp_group": ("pod", "data"),  # grouped MoE dispatch (per DP shard)
+    "exp_e": None,  # replicated expert axis around dispatch/combine
+    "exp_cap": None,
+    "conv": None,
+    "state": None,
+    "zero": None,
+    "layers": None,
+    "replicated": None,
+}
+
+
+@dataclasses.dataclass
+class ShardingCtx:
+    """Resolves logical axis names to mesh axes and applies activation
+    sharding constraints. With ``mesh=None`` everything is a no-op (single
+    device smoke tests)."""
+
+    mesh: Any = None
+    rules: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def resolve(self, logical_axes) -> P:
+        names = []
+        used = set()
+        for ax in logical_axes:
+            r = self.rules.get(ax, DEFAULT_RULES.get(ax)) if ax else None
+            if isinstance(r, (list, tuple)):
+                r = tuple(a for a in r if self.mesh and a in self.mesh.axis_names)
+                r = tuple(a for a in r if a not in used) or None
+            elif r is not None:
+                if self.mesh is not None and r not in self.mesh.axis_names:
+                    r = None
+                if r in used:
+                    r = None
+            if r is not None:
+                used.update(r if isinstance(r, tuple) else (r,))
+            names.append(r)
+        return P(*names)
+
+    def act(self, x: jax.Array, *logical_axes) -> jax.Array:
+        """Apply a sharding constraint to an activation."""
+        if self.mesh is None:
+            return x
+        assert len(logical_axes) == x.ndim, (logical_axes, x.shape)
+        spec = self.resolve(logical_axes)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec)
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class RunCtx:
+    """Per-call context threaded through model apply functions."""
+
+    shd: ShardingCtx
+    quant: str = "none"  # none | mxfp4_ste | mxfp4_wonly | cim
+    impl: str = "jnp"  # jnp | pallas
+    decode: bool = False
+    attn_chunk: int = 1024  # KV chunk for the online-softmax path
+    q_chunk: int = 2048
+    dense_attn_max: int = 2048  # below this seq len use the dense path
+    unroll_scans: bool = False  # blockwise cost analysis: count loop trips
+
+    def act(self, x, *axes):
+        return self.shd.act(x, *axes)
+
+
+# ----------------------------------------------------------------- linear
+
+def linear_init(
+    key,
+    k: int,
+    n: int,
+    *,
+    use_bias: bool = False,
+    in_axis: str = "embed",
+    out_axis: str = "mlp",
+    scale: float | None = None,
+):
+    scale = (1.0 / k) ** 0.5 if scale is None else scale
+    w = jax.random.normal(key, (k, n), jnp.float32) * scale
+    params = {"w": w}
+    specs = {"w": (in_axis, out_axis)}
+    if use_bias:
+        params["b"] = jnp.zeros((n,), jnp.float32)
+        specs["b"] = (out_axis,)
+    return params, specs
+
+
+def linear_apply(ctx: RunCtx, params: dict, x: jax.Array) -> jax.Array:
+    """Quantization-mode-dispatched linear. x: [..., K] (bf16)."""
+    if "codes" in params:  # serving-converted MXFP4 weight-only params
+        if ctx.impl == "pallas":
+            from repro.kernels.mxfp4_matmul import ops as mmops
+
+            y = mmops.mxfp4_matmul(
+                x, params["codes"], params["exps"], interpret=True
+            )
+        else:
+            w = _dequant_packed(params["codes"], params["exps"])
+            y = jnp.matmul(x.astype(jnp.bfloat16), w)
+    else:
+        w = params["w"].astype(jnp.bfloat16)
+        if ctx.quant == "mxfp4_ste":
+            wq = mxlib.fake_quant_axis(params["w"], axis=0)
+            xq = mxlib.fake_quant(x.astype(jnp.float32))
+            y = jnp.matmul(
+                xq.astype(jnp.bfloat16), wq.astype(jnp.bfloat16)
+            )
+        elif ctx.quant == "mxfp4_ste_prequant":
+            # weights were fake-quantized once at the step boundary
+            # (exact: weights are constant within a step) — gathers move
+            # bf16 instead of f32 and the quant ops run once, not k_micro
+            # times
+            xq = mxlib.fake_quant(x.astype(jnp.float32))
+            y = jnp.matmul(xq.astype(jnp.bfloat16), w)
+        else:
+            y = jnp.matmul(x.astype(jnp.bfloat16), w)
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    return y
+
+
+def _dequant_packed(codes: jax.Array, exps: jax.Array) -> jax.Array:
+    """packed uint8 codes [K//2, N] + biased exps [K//32, N] -> bf16 [K, N].
+
+    All-bf16 arithmetic: codes/2 and 2^e are exactly representable in
+    bf16, so this is bit-identical to the f32 path while cutting the
+    dequant intermediate traffic ~3x (decode is weight-read bound —
+    EXPERIMENTS.md §Perf; the Pallas kernel removes even this by
+    expanding inside VMEM)."""
+    kp2, n = codes.shape[-2], codes.shape[-1]
+    k = kp2 * 2
+    c = jnp.swapaxes(mxlib.unpack_codes(jnp.swapaxes(codes, -1, -2)), -1, -2)
+    scale = mxlib.exp2i(mxlib.exps_from_biased(exps) - 1).astype(
+        jnp.bfloat16
+    )  # 2^(e-1) == 0.5 * 2^e, exact
+    cb = c.reshape(c.shape[:-2] + (k // 32, 32, n)).astype(jnp.bfloat16)
+    w = cb * scale[..., :, None, :]
+    return w.reshape(c.shape[:-2] + (k, n))
+
+
+def _quantize_packed(w: jax.Array) -> dict:
+    """[..., K, N] float -> packed MXFP4 {codes [..., K//2, N] uint8,
+    exps [..., K//32, N] uint8} quantized along K."""
+    mxq = mxlib.quantize(jnp.swapaxes(w, -1, -2))
+    codes = jnp.swapaxes(mxq.codes, -1, -2)
+    packed = jnp.swapaxes(
+        mxlib.pack_codes(jnp.swapaxes(codes, -1, -2)), -1, -2
+    )
+    exps = mxlib.exps_to_biased(jnp.swapaxes(mxq.exps, -1, -2))
+    return {"codes": packed, "exps": exps}
+
+
+def quantize_linear_params(params: dict) -> dict:
+    """Convert a float linear param dict to packed MXFP4 (weight-only)."""
+    out = _quantize_packed(params["w"])
+    if "b" in params:
+        out["b"] = params["b"]
+    return out
+
+
+def is_linear_params(p) -> bool:
+    return isinstance(p, dict) and "w" in p and getattr(p["w"], "ndim", 0) == 2
+
+
+def quantize_weights_tree(tree):
+    """Step-boundary weight fake-quant for training ("prequant"): exact
+    hoisting of the per-linear fake-quant out of the microbatch loop
+    (weights are constant within a step), which also makes every FSDP
+    all-gather move bf16 instead of f32 and runs the quant ops once
+    instead of k_micro times per step."""
+
+    def rec(node):
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                if (
+                    k == "w"
+                    and getattr(v, "ndim", 0) in (2, 3)  # incl. layer-stacked
+                    and v.shape[-2] % 32 == 0
+                ):
+                    out[k] = mxlib.fake_quant_axis(v, -2).astype(jnp.bfloat16)
+                elif (
+                    k in ("w1", "w2", "w3")
+                    and getattr(v, "ndim", 0) in (3, 4)  # incl. layer-stacked
+                    and v.shape[-2] % 32 == 0
+                ):
+                    out[k] = mxlib.fake_quant_axis(v, -2).astype(jnp.bfloat16)
+                else:
+                    out[k] = rec(v)
+            return out
+        if isinstance(node, (list, tuple)):
+            return type(node)(rec(v) for v in node)
+        if hasattr(node, "dtype") and node.dtype == jnp.float32 and node.ndim >= 2:
+            return node.astype(jnp.bfloat16)
+        return node
+
+    return rec(tree)
+
+
+def convert_params_mxfp4(tree, min_n: int = 256):
+    """Serving transform: every static linear weight with a 32-aligned
+    contraction dim and a wide-enough output dim becomes packed MXFP4
+    (4.25 b/param resident, the FWS analogue); remaining float params are
+    cast to bf16. Pure jnp — usable under jax.eval_shape for dry-runs."""
+
+    def rec(node):
+        if isinstance(node, dict):
+            out = {}
+            if (
+                "w" in node
+                and getattr(node["w"], "ndim", 0) in (2, 3)
+                and node["w"].shape[-2] % 32 == 0
+                and node["w"].shape[-1] >= min_n
+            ):
+                out.update(quantize_linear_params(node))
+                for k, v in node.items():
+                    if k not in ("w", "b"):
+                        out[k] = rec(v)
+                return out
+            for k, v in node.items():
+                if (
+                    k in ("w1", "w2", "w3")
+                    and getattr(v, "ndim", 0) in (3, 4)
+                    and v.shape[-2] % 32 == 0
+                ):
+                    out[k] = _quantize_packed(v)
+                else:
+                    out[k] = rec(v)
+            return out
+        if isinstance(node, (list, tuple)):
+            return type(node)(rec(v) for v in node)
+        if hasattr(node, "dtype") and node.dtype == jnp.float32:
+            return node.astype(jnp.bfloat16)
+        return node
+
+    return rec(tree)
+
+
+def convert_specs_mxfp4(specs, params_struct, min_n: int = 256):
+    """Mirror of convert_params_mxfp4 on the logical-axis spec tree.
+    params_struct is the *pre-conversion* shape tree (for the gates)."""
+
+    def rec(spec_node, p_node):
+        if isinstance(spec_node, dict):
+            out = {}
+            if (
+                "w" in spec_node
+                and getattr(p_node.get("w"), "ndim", 0) in (2, 3)
+                and p_node["w"].shape[-2] % 32 == 0
+                and p_node["w"].shape[-1] >= min_n
+            ):
+                out["codes"] = spec_node["w"]
+                out["exps"] = spec_node["w"]
+                for k, v in spec_node.items():
+                    if k == "w":
+                        continue
+                    out[k] = v if k == "b" else rec(v, p_node[k])
+                return out
+            for k, v in spec_node.items():
+                if (
+                    k in ("w1", "w2", "w3")
+                    and getattr(p_node.get(k), "ndim", 0) in (3, 4)
+                    and p_node[k].shape[-2] % 32 == 0
+                ):
+                    out[k] = {"codes": v, "exps": v}
+                else:
+                    out[k] = rec(v, p_node[k])
+            return out
+        if isinstance(spec_node, (list, tuple)) and not _spec_leaf(spec_node):
+            return type(spec_node)(
+                rec(v, p) for v, p in zip(spec_node, p_node)
+            )
+        return spec_node
+
+    return rec(specs, params_struct)
+
+
+def _spec_leaf(x) -> bool:
+    return isinstance(x, tuple) and all(
+        isinstance(a, (str, type(None))) for a in x
+    )
+
+
+# ------------------------------------------------------------------ norms
+
+def rmsnorm_init(d: int):
+    return {"gamma": jnp.ones((d,), jnp.float32)}, {"gamma": ("embed",)}
+
+
+def rmsnorm_apply(params: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * params["gamma"]
+    return y.astype(x.dtype)
+
+
+def layernorm_init(d: int):
+    return (
+        {"gamma": jnp.ones((d,), jnp.float32), "beta": jnp.zeros((d,), jnp.float32)},
+        {"gamma": ("embed",), "beta": ("embed",)},
+    )
+
+
+def layernorm_apply(params: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps) * params["gamma"] + params["beta"]
+    return y.astype(x.dtype)
+
+
+def norm_init(kind: str, d: int):
+    return rmsnorm_init(d) if kind == "rmsnorm" else layernorm_init(d)
+
+
+def norm_apply(kind: str, params: dict, x: jax.Array) -> jax.Array:
+    return rmsnorm_apply(params, x) if kind == "rmsnorm" else layernorm_apply(params, x)
+
+
+# ------------------------------------------------------------- embeddings
+
+def embed_init(key, vocab: int, d: int):
+    emb = jax.random.normal(key, (vocab, d), jnp.float32) * (d**-0.5)
+    return {"emb": emb}, {"emb": ("vocab", "embed")}
+
+
+def embed_apply(ctx: RunCtx, params: dict, ids: jax.Array) -> jax.Array:
+    out = jnp.take(params["emb"].astype(jnp.bfloat16), ids, axis=0)
+    return out

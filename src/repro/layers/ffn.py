@@ -1,0 +1,48 @@
+"""Feed-forward variants: gelu / squared-relu MLPs and swiglu / geglu GLUs."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.common import RunCtx, linear_apply, linear_init, norm_apply, norm_init
+
+GLU_KINDS = ("swiglu", "geglu")
+
+
+def _act(kind: str, x: jax.Array) -> jax.Array:
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    if kind == "relu2":  # Nemotron-4 squared ReLU
+        r = jax.nn.relu(x)
+        return r * r
+    if kind == "swiglu":
+        return jax.nn.silu(x)
+    if kind == "geglu":
+        return jax.nn.gelu(x)
+    raise ValueError(kind)
+
+
+def ffn_init(key, d: int, d_ff: int, kind: str, norm: str, use_bias: bool = False):
+    ks = jax.random.split(key, 3)
+    p, s = {}, {}
+    p["ln"], s["ln"] = norm_init(norm, d)
+    p["w1"], s["w1"] = linear_init(ks[0], d, d_ff, use_bias=use_bias, out_axis="mlp")
+    if kind in GLU_KINDS:
+        p["w3"], s["w3"] = linear_init(ks[1], d, d_ff, use_bias=use_bias, out_axis="mlp")
+    p["w2"], s["w2"] = linear_init(
+        ks[2], d_ff, d, use_bias=use_bias, in_axis="mlp", out_axis="embed"
+    )
+    return p, s
+
+
+def ffn_apply(ctx: RunCtx, kind: str, norm: str, p: dict, x: jax.Array) -> jax.Array:
+    """Pre-norm FFN sublayer with residual."""
+    xn = norm_apply(norm, p["ln"], x)
+    h = _act(kind, linear_apply(ctx, p["w1"], xn))
+    if kind in GLU_KINDS:
+        h = h * linear_apply(ctx, p["w3"], xn)
+    h = ctx.act(h, "batch", "seq", "mlp")
+    y = linear_apply(ctx, p["w2"], h)
+    y = ctx.act(y, "batch", "seq", "embed")
+    return x + y.astype(x.dtype)

@@ -1,0 +1,153 @@
+"""Sort-based top-k Mixture-of-Experts (Mixtral / Qwen3-MoE style).
+
+Dispatch is sort-and-scatter with a static per-expert capacity — no
+[T, E, C] one-hot einsum (which is quadratic in sequence length) — so the
+compiled FLOPs track the *active* parameter count, as required for honest
+roofline accounting. Tokens overflowing an expert's capacity are dropped
+(standard GShard semantics); capacity_factor controls the slack.
+
+Expert sharding is rule-driven: "experts" -> mesh axis for EP (many small
+experts, e.g. qwen3 128e), "expert_mlp" -> mesh axis for TP-within-expert
+(few big experts, e.g. mixtral 8e).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mx as mxlib
+from repro.layers.common import RunCtx, linear_init, norm_init, norm_apply
+from repro.layers.ffn import GLU_KINDS, _act
+
+
+def moe_init(
+    key,
+    d: int,
+    d_ff: int,
+    n_experts: int,
+    kind: str,
+    norm: str,
+):
+    ks = jax.random.split(key, 4)
+    p, s = {}, {}
+    p["ln"], s["ln"] = norm_init(norm, d)
+    p["router"], s["router"] = linear_init(ks[0], d, n_experts, out_axis="replicated")
+    scale = (1.0 / d) ** 0.5
+    p["w1"] = jax.random.normal(ks[1], (n_experts, d, d_ff), jnp.float32) * scale
+    s["w1"] = ("experts", "embed", "expert_mlp")
+    if kind in GLU_KINDS:
+        p["w3"] = jax.random.normal(ks[2], (n_experts, d, d_ff), jnp.float32) * scale
+        s["w3"] = ("experts", "embed", "expert_mlp")
+    p["w2"] = jax.random.normal(ks[3], (n_experts, d_ff, d), jnp.float32) * (
+        1.0 / d_ff
+    ) ** 0.5
+    s["w2"] = ("experts", "expert_mlp", "embed")
+    return p, s
+
+
+def _expert_w(ctx: RunCtx, p: dict, name: str) -> jax.Array:
+    w = p[name]
+    if isinstance(w, dict):  # serving-converted packed MXFP4
+        from repro.layers.common import _dequant_packed
+
+        return jax.vmap(lambda c, e: _dequant_packed(c, e))(w["codes"], w["exps"])
+    if ctx.quant == "mxfp4_ste":
+        w = mxlib.fake_quant_axis(w, axis=1)
+    # "mxfp4_ste_prequant": already quantized at the step boundary
+    return w.astype(jnp.bfloat16)
+
+
+def _n_groups(ctx: RunCtx, t: int) -> int:
+    """Dispatch groups == data-parallel shards, so sort/gather/scatter stay
+    shard-local (a flat sort over the sharded token axis is unshardable and
+    XLA would replicate it, all-reducing [T*k, d] tensors)."""
+    g = 1
+    if ctx.shd.mesh is not None:
+        for a in ("pod", "data"):
+            if a in ctx.shd.mesh.axis_names:
+                g *= ctx.shd.mesh.shape[a]
+    while t % g:
+        g //= 2
+    return max(g, 1)
+
+
+def moe_apply(
+    ctx: RunCtx,
+    kind: str,
+    norm: str,
+    p: dict,
+    x: jax.Array,
+    top_k: int,
+    capacity_factor: float = 1.25,
+) -> jax.Array:
+    b, s, d = x.shape
+    e = p["router"]["w"].shape[-1]
+    t = b * s
+    g = _n_groups(ctx, t)
+    tg = t // g
+    xn = norm_apply(norm, p["ln"], x).reshape(g, tg, d)
+    if ctx.quant in ("mxfp4_ste", "mxfp4_ste_prequant"):
+        xn = mxlib.fake_quant(xn)  # dtype-preserving: bf16 cotangents
+    xn = ctx.act(xn, "exp_group", "seq", "embed")
+
+    logits = (xn.astype(jnp.float32) @ p["router"]["w"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, top_k)  # [G, tg, k]
+    gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+
+    cap = int(max(1, -(-tg * top_k * capacity_factor // e)))
+    fe = idx.reshape(g, tg * top_k)
+    order = jnp.argsort(fe, axis=-1)  # stable, per group
+    se = jnp.take_along_axis(fe, order, axis=-1)
+    # first occurrence of each expert in the sorted list, per group
+    starts = jax.vmap(
+        lambda row: jnp.searchsorted(row, jnp.arange(e), side="left")
+    )(se)  # [G, E]
+    pos_in_e = jnp.arange(tg * top_k)[None] - jnp.take_along_axis(
+        starts, se, axis=-1
+    )
+    keep = pos_in_e < cap
+    dest = jnp.where(keep, se * cap + pos_in_e, 0)  # dropped -> masked add
+    src_tok = order // top_k  # [G, tg*k]
+
+    gi = jnp.arange(g)[:, None]
+    xs = jnp.take_along_axis(xn, src_tok[..., None], axis=1)  # [G, tg*k, d]
+    buf = jnp.zeros((g, e * cap, d), xn.dtype).at[gi, dest].add(
+        xs * keep[..., None].astype(xn.dtype)
+    )
+    buf = buf.reshape(g, e, cap, d)
+    # keep E replicated over `model` here: the scatter that builds buf is
+    # local per data shard; sharding E now would force XLA to all-gather
+    # the [G, tg*k, d] updates (measured 16 GiB/block on qwen3) — the
+    # expert einsum below slices E locally instead.
+    buf = ctx.act(buf, "exp_group", "exp_e", "exp_cap", "embed")
+
+    w1 = _expert_w(ctx, p, "w1")
+    h = jnp.einsum("gecd,edf->gecf", buf, w1)
+    h = _act(kind, h)
+    if kind in GLU_KINDS:
+        h = h * jnp.einsum("gecd,edf->gecf", buf, _expert_w(ctx, p, "w3"))
+    h = ctx.act(h, "exp_group", "experts", "exp_cap", "expert_mlp")
+    if ctx.quant in ("mxfp4_ste", "mxfp4_ste_prequant"):
+        h = mxlib.fake_quant(h)
+    out_buf = jnp.einsum("gecf,efd->gecd", h, _expert_w(ctx, p, "w2"))
+    # gather E back to replicated for the (shard-local) combine
+    out_buf = ctx.act(out_buf, "exp_group", "exp_e", "exp_cap", "embed")
+
+    flat_out = out_buf.reshape(g, e * cap, d)
+    gathered = jnp.where(
+        keep[..., None],
+        jnp.take_along_axis(flat_out, jnp.clip(dest, 0, e * cap - 1)[..., None],
+                            axis=1),
+        0.0,
+    )  # [G, tg*k, d] in sorted order
+    gates_sorted = jnp.take_along_axis(gate.reshape(g, tg * top_k), order,
+                                       axis=-1)
+    contrib = gathered * gates_sorted[..., None].astype(gathered.dtype)
+    y = jnp.zeros((g, tg, d), x.dtype).at[gi, src_tok].add(
+        contrib.astype(x.dtype)
+    )
+    y = y.reshape(b, s, d)
+    y = ctx.act(y, "batch", "seq", "embed")
+    return x + y

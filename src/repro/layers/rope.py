@@ -1,0 +1,61 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL style M-RoPE."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _rope_angles(positions: jax.Array, dim: int, theta: float) -> jax.Array:
+    """positions [..., S] -> angles [..., S, dim//2] (f32)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    return positions.astype(jnp.float32)[..., None] * inv
+
+
+def apply_rope(
+    x: jax.Array,
+    positions: jax.Array,
+    theta: float = 1e4,
+    rotary_dim: int | None = None,
+) -> jax.Array:
+    """x: [B, S, H, D]; positions: [B, S] int32. Rotates the first
+    ``rotary_dim`` features (half-split convention)."""
+    d = x.shape[-1]
+    rd = d if rotary_dim is None else rotary_dim
+    ang = _rope_angles(positions, rd, theta)  # [B, S, rd//2]
+    cos = jnp.cos(ang)[..., None, :].astype(x.dtype)  # [B, S, 1, rd//2]
+    sin = jnp.sin(ang)[..., None, :].astype(x.dtype)
+    x1, x2 = x[..., : rd // 2], x[..., rd // 2 : rd]
+    rot = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([rot, x[..., rd:]], axis=-1) if rd < d else rot
+
+
+def apply_mrope(
+    x: jax.Array,
+    positions: jax.Array,
+    theta: float = 1e6,
+    sections=(16, 24, 24),
+) -> jax.Array:
+    """Qwen2-VL multimodal RoPE. positions: [3, B, S] (temporal, h, w)
+    component position ids; ``sections`` are half-dim splits per component
+    (sum == head_dim // 2)."""
+    d = x.shape[-1]
+    assert sum(sections) == d // 2, (sections, d)
+    inv = 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    ang3 = positions.astype(jnp.float32)[..., None] * inv  # [3, B, S, d//2]
+    # pick which component drives each frequency band
+    comp = jnp.repeat(
+        jnp.arange(3), jnp.asarray(sections), total_repeat_length=d // 2
+    )
+    ang = jnp.take_along_axis(
+        jnp.moveaxis(ang3, 0, -1), comp[None, None, :, None], axis=-1
+    )[..., 0]  # [B, S, d//2]
+    cos = jnp.cos(ang)[..., None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[..., None, :].astype(x.dtype)
+    x1, x2 = x[..., : d // 2], x[..., d // 2 :]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def text_mrope_positions(positions: jax.Array) -> jax.Array:
+    """Text-only M-RoPE position ids: all three components equal."""
+    return jnp.broadcast_to(positions[None], (3,) + positions.shape)

@@ -1,0 +1,217 @@
+"""Mamba2 (SSD) mixer: chunked parallel scan for train/prefill and a
+single-step state update for decode. Static projection weights take the
+paper's MXFP4 path; the recurrence itself is the "dynamic" compute
+(digital-path analogue — see DESIGN.md §Arch-applicability)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mx as mxlib
+from repro.layers.common import RunCtx, linear_apply, linear_init, norm_apply, norm_init
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaStatic:
+    d_model: int
+    n_heads: int
+    head_dim: int  # P
+    d_state: int  # N
+    n_groups: int = 1
+    conv_k: int = 4
+    chunk: int = 256
+    norm: str = "rmsnorm"
+
+    @property
+    def d_inner(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+
+def mamba_init(key, cfg: MambaStatic):
+    ks = jax.random.split(key, 4)
+    d, di, h = cfg.d_model, cfg.d_inner, cfg.n_heads
+    gn = cfg.n_groups * cfg.d_state
+    p, s = {}, {}
+    p["ln"], s["ln"] = norm_init(cfg.norm, d)
+    p["in_proj"], s["in_proj"] = linear_init(
+        ks[0], d, 2 * di + 2 * gn + h, out_axis="mlp"
+    )
+    p["conv_w"] = (
+        jax.random.normal(ks[1], (cfg.conv_dim, cfg.conv_k), jnp.float32)
+        * (1.0 / cfg.conv_k) ** 0.5
+    )
+    s["conv_w"] = ("mlp", "conv")
+    p["conv_b"] = jnp.zeros((cfg.conv_dim,), jnp.float32)
+    s["conv_b"] = ("mlp",)
+    p["A_log"] = jnp.log(
+        jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)
+    )  # A = -exp(A_log)
+    s["A_log"] = ("heads",)
+    p["D"] = jnp.ones((h,), jnp.float32)
+    s["D"] = ("heads",)
+    p["dt_bias"] = jnp.zeros((h,), jnp.float32)
+    s["dt_bias"] = ("heads",)
+    p["gn"], s["gn"] = norm_init("rmsnorm", di)
+    p["out_proj"], s["out_proj"] = linear_init(
+        ks[2], di, d, in_axis="mlp", out_axis="embed"
+    )
+    return p, s
+
+
+def _split_zxbcdt(cfg: MambaStatic, zxbcdt: jax.Array):
+    di, gn, h = cfg.d_inner, cfg.n_groups * cfg.d_state, cfg.n_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : di + di + 2 * gn]
+    dt = zxbcdt[..., di + di + 2 * gn :]
+    assert dt.shape[-1] == h
+    return z, xbc, dt
+
+
+def _conv1d(cfg: MambaStatic, p, xbc: jax.Array) -> jax.Array:
+    """Causal depthwise conv over [B, S, C]."""
+    k = cfg.conv_k
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + xbc.shape[1], :] * p["conv_w"][:, i] for i in range(k)
+    )
+    return jax.nn.silu(out + p["conv_b"].astype(out.dtype))
+
+
+def _ssd_chunked(x, dt, a, bm, cm, chunk: int):
+    """x [B,S,H,P], dt [B,S,H], a [H] (<0), bm/cm [B,S,G,N].
+    Returns y [B,S,H,P] and the final state [B,H,P,N]."""
+    b, s, h, pp = x.shape
+    n = bm.shape[-1]
+    g = bm.shape[-2]
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bm = jnp.pad(bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cm = jnp.pad(cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = s + pad
+    c = sp // q
+    rep = h // g
+    xc = x.reshape(b, c, q, h, pp).astype(jnp.float32)
+    dtc = dt.reshape(b, c, q, h).astype(jnp.float32)
+    bc = jnp.repeat(bm.reshape(b, c, q, g, n), rep, axis=3).astype(jnp.float32)
+    cc = jnp.repeat(cm.reshape(b, c, q, g, n), rep, axis=3).astype(jnp.float32)
+
+    dta = dtc * a  # [b,c,q,h] (<= 0)
+    csh = jnp.cumsum(dta, axis=2).transpose(0, 1, 3, 2)  # [b,c,h,q]
+    xd = xc * dtc[..., None]
+
+    # intra-chunk (attention-like with decay mask)
+    diff = csh[..., :, None] - csh[..., None, :]  # [b,c,h,i,j]
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    # mask BEFORE exp: the i<j half has diff>0 and would overflow to inf,
+    # poisoning the VJP with 0*inf even though the value is masked out.
+    ll = jnp.exp(jnp.where(tri, diff, -jnp.inf))
+    cb = jnp.einsum("bcihn,bcjhn->bchij", cc, bc)
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp", cb * ll, xd)
+
+    # chunk states
+    decay_end = jnp.exp(csh[..., -1:] - csh)  # [b,c,h,q]
+    states = jnp.einsum("bcqhn,bchq,bcqhp->bchpn", bc, decay_end, xd)
+    chunk_decay = jnp.exp(csh[..., -1])  # [b,c,h]
+
+    def step(s_prev, inp):
+        cd, st = inp
+        return s_prev * cd[..., None, None] + st, s_prev
+
+    s0 = jnp.zeros((b, h, pp, n), jnp.float32)
+    s_final, s_prevs = jax.lax.scan(
+        step, s0, (chunk_decay.swapaxes(0, 1), states.swapaxes(0, 1))
+    )
+    s_prevs = s_prevs.swapaxes(0, 1)  # [b,c,h,p,n] state entering chunk
+
+    decay_in = jnp.exp(csh)  # [b,c,h,q]
+    y_inter = jnp.einsum("bcqhn,bchq,bchpn->bcqhp", cc, decay_in, s_prevs)
+    y = (y_intra + y_inter).reshape(b, sp, h, pp)[:, :s]
+    return y, s_final
+
+
+def mamba_apply(
+    ctx: RunCtx,
+    cfg: MambaStatic,
+    p: dict,
+    x: jax.Array,
+    cache: dict | None = None,
+):
+    """Pre-norm Mamba2 sublayer with residual. Returns (y, new_cache)."""
+    b, s, d = x.shape
+    h, pp, n, g = cfg.n_heads, cfg.head_dim, cfg.d_state, cfg.n_groups
+    xn = norm_apply(cfg.norm, p["ln"], x)
+    zxbcdt = linear_apply(ctx, p["in_proj"], xn)
+    z, xbc, dt = _split_zxbcdt(cfg, zxbcdt)
+    a = -jnp.exp(p["A_log"])  # [h]
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+
+    if cache is None or s > 1:
+        xbc_raw = xbc
+        xbc = _conv1d(cfg, p, xbc)
+        xin = xbc[..., : cfg.d_inner].reshape(b, s, h, pp)
+        xin = ctx.act(xin, "batch", "seq", "heads", "head_dim")
+        bm = xbc[..., cfg.d_inner : cfg.d_inner + g * n].reshape(b, s, g, n)
+        cm = xbc[..., cfg.d_inner + g * n :].reshape(b, s, g, n)
+        y, s_final = _ssd_chunked(xin, dtv, a, bm, cm, cfg.chunk)
+        new_cache = None
+        if cache is not None:  # prefill-into-cache handoff
+            kk = cfg.conv_k - 1
+            tail = xbc_raw[:, -kk:].astype(jnp.float32)
+            if s < kk:
+                tail = jnp.pad(tail, ((0, 0), (kk - s, 0), (0, 0)))
+            new_cache = {"conv": tail.swapaxes(1, 2), "state": s_final}
+    else:
+        # single-step decode: x [b, 1, d]
+        win = jnp.concatenate(
+            [cache["conv"], xbc.astype(jnp.float32).swapaxes(1, 2)], axis=-1
+        )  # [b, convdim, k]
+        conv_out = jax.nn.silu(
+            jnp.sum(win * p["conv_w"][None], axis=-1) + p["conv_b"]
+        )  # [b, convdim]
+        new_conv = win[..., 1:]
+        xin = conv_out[:, : cfg.d_inner].reshape(b, h, pp)
+        bm = conv_out[:, cfg.d_inner : cfg.d_inner + g * n].reshape(b, g, n)
+        cm = conv_out[:, cfg.d_inner + g * n :].reshape(b, g, n)
+        bh = jnp.repeat(bm, h // g, axis=1)
+        ch = jnp.repeat(cm, h // g, axis=1)
+        dt1 = dtv[:, 0]  # [b, h]
+        da = jnp.exp(dt1 * a)  # [b, h]
+        xd = xin * dt1[..., None]
+        st = cache["state"] * da[..., None, None] + jnp.einsum(
+            "bhp,bhn->bhpn", xd, bh
+        )
+        y = jnp.einsum("bhn,bhpn->bhp", ch, st)[:, None]  # [b,1,h,p]
+        new_cache = {"conv": new_conv, "state": st}
+        s_final = st
+
+    y = y + xin.reshape(y.shape) * p["D"][:, None]
+    y = y.reshape(b, s, cfg.d_inner)
+    y = norm_apply("rmsnorm", p["gn"], y * jax.nn.silu(z.astype(jnp.float32)))
+    out = linear_apply(ctx, p["out_proj"], y.astype(jnp.bfloat16))
+    out = ctx.act(out, "batch", "seq", "embed")
+    return x + out.astype(x.dtype), new_cache
+
+
+def mamba_cache_init(cfg: MambaStatic, batch: int, dtype=jnp.float32):
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_dim, cfg.conv_k - 1), jnp.float32),
+        "state": jnp.zeros(
+            (batch, cfg.n_heads, cfg.head_dim, cfg.d_state), jnp.float32
+        ),
+    }
+
+
+MAMBA_CACHE_SPECS = {
+    "conv": ("batch", "mlp", "conv"),
+    "state": ("batch", "state_heads", "head_dim", "state"),
+}

@@ -1,0 +1,322 @@
+"""xLSTM blocks: mLSTM (matrix memory, exponential gating) and sLSTM
+(scalar memory, block-diagonal recurrence). Sequential lax.scan over time
+(compact HLO; a chunkwise-parallel mLSTM is a §Perf candidate).
+
+Static projections take the MXFP4 path; the matrix-memory outer products
+are dynamic compute (digital-path analogue, DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.common import (
+    RunCtx,
+    linear_apply,
+    linear_init,
+    norm_apply,
+    norm_init,
+    rmsnorm_apply,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMStatic:
+    d_model: int
+    n_heads: int
+    proj_factor: float = 2.0  # mLSTM up-projection factor
+    conv_k: int = 4
+    norm: str = "rmsnorm"
+    ffn_factor: float = 4.0 / 3.0  # sLSTM post-FFN
+
+    @property
+    def d_inner(self) -> int:
+        return int(self.d_model * self.proj_factor)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_inner // self.n_heads
+
+    @property
+    def s_head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+# ------------------------------------------------------------------ mLSTM
+
+def mlstm_init(key, cfg: XLSTMStatic):
+    ks = jax.random.split(key, 8)
+    d, di, h = cfg.d_model, cfg.d_inner, cfg.n_heads
+    p, s = {}, {}
+    p["ln"], s["ln"] = norm_init(cfg.norm, d)
+    p["w_up"], s["w_up"] = linear_init(ks[0], d, 2 * di, out_axis="mlp")
+    p["conv_w"] = jax.random.normal(ks[1], (di, cfg.conv_k), jnp.float32) * 0.5
+    s["conv_w"] = ("mlp", "conv")
+    p["conv_b"] = jnp.zeros((di,), jnp.float32)
+    s["conv_b"] = ("mlp",)
+    p["wq"], s["wq"] = linear_init(ks[2], di, di, in_axis="mlp", out_axis="mlp")
+    p["wk"], s["wk"] = linear_init(ks[3], di, di, in_axis="mlp", out_axis="mlp")
+    p["wv"], s["wv"] = linear_init(ks[4], di, di, in_axis="mlp", out_axis="mlp")
+    p["w_if"], s["w_if"] = linear_init(ks[5], di, 2 * h, in_axis="mlp",
+                                       out_axis="heads")
+    p["gn"], s["gn"] = norm_init("rmsnorm", di)
+    p["skip"] = jnp.ones((di,), jnp.float32)
+    s["skip"] = ("mlp",)
+    p["w_down"], s["w_down"] = linear_init(ks[6], di, d, in_axis="mlp",
+                                           out_axis="embed")
+    return p, s
+
+
+def _mlstm_step(carry, inp, scale):
+    cm, nm, mm = carry  # C [b,h,dk,dv], n [b,h,dk], m [b,h]
+    q, k, v, ig, fg = inp  # q/k/v [b,h,dk|dv], ig/fg [b,h]
+    m_new = jnp.maximum(fg + mm, ig)
+    i_p = jnp.exp(ig - m_new)
+    f_p = jnp.exp(fg + mm - m_new)
+    cm = f_p[..., None, None] * cm + i_p[..., None, None] * (
+        k[..., :, None] * v[..., None, :]
+    )
+    nm = f_p[..., None] * nm + i_p[..., None] * k
+    hn = jnp.einsum("bhkv,bhk->bhv", cm, q) * scale
+    dn = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", nm, q) * scale), 1.0)
+    h_t = hn / dn[..., None]
+    return (cm, nm, m_new), h_t
+
+
+def _mlstm_chunkwise(qf, kf, vf, ig, fg, init, scale, chunk: int = 64,
+                     unroll: bool = False):
+    """Chunkwise-parallel stabilized mLSTM, exactly equivalent to scanning
+    :func:`_mlstm_step` (tested): the running stabilizer satisfies
+    m_t = F_t + G_t with F_t = cumsum(log f) and
+    G_t = max(m_prev, cummax(i~_j - F_j)), so all exp(F_i) factors cancel
+    and each chunk reduces to two masked matmuls + an O(S/L) state scan.
+    This removes the per-step C-matrix read/write traffic that made
+    sequential xLSTM memory-bound (EXPERIMENTS.md §Perf).
+
+    qf/kf/vf: [b,s,h,dk] (kf pre-scaled); ig/fg: [b,s,h] (fg=log sigmoid).
+    init: (C [b,h,dk,dv], n [b,h,dk], m [b,h]). Returns (h [b,s,h,dv],
+    (C,n,m) final).
+    """
+    b, s, h, dk = qf.shape
+    ll = min(chunk, s)
+    pad = (-s) % ll
+    if pad:
+        z4 = ((0, 0), (0, pad), (0, 0), (0, 0))
+        z3 = ((0, 0), (0, pad), (0, 0))
+        qf, kf, vf = (jnp.pad(a, z4) for a in (qf, kf, vf))
+        ig = jnp.pad(ig, z3, constant_values=-1e30)  # no input
+        fg = jnp.pad(fg, z3)  # log f = 0: no decay
+    nc = (s + pad) // ll
+
+    def chunkf(carry, xs):
+        c_prev, n_prev, m_prev = carry
+        q, k, v, igc, fgc = xs  # [b,L,h,*]
+        f_cum = jnp.cumsum(fgc, axis=1)  # [b,L,h]
+        u = igc - f_cum
+        g = jnp.maximum(m_prev[:, None], jax.lax.cummax(u, axis=1))
+        dlog = u[:, None, :, :] - g[:, :, None, :]  # [b,i,j,h]
+        tri = jnp.tril(jnp.ones((ll, ll), bool))[None, :, :, None]
+        w = jnp.exp(jnp.where(tri, dlog, -jnp.inf))
+        sij = jnp.einsum("bihd,bjhd->bijh", q, k)
+        sw = sij * w
+        num = jnp.einsum("bijh,bjhd->bihd", sw, v)
+        den = jnp.sum(sw, axis=2)  # [b,i,h]
+        c_i = jnp.exp(m_prev[:, None] - g)  # [b,L,h]
+        num = num + c_i[..., None] * jnp.einsum("bhkv,bihk->bihv", c_prev, q)
+        den = den + c_i * jnp.einsum("bhk,bihk->bih", n_prev, q)
+        hout = num * scale / jnp.maximum(
+            jnp.abs(den * scale), 1.0
+        )[..., None]
+        # end-of-chunk state
+        g_l = g[:, -1]  # [b,h]
+        wj = jnp.exp(u - g_l[:, None])  # [b,L,h]
+        cc = jnp.exp(m_prev - g_l)
+        c_new = cc[..., None, None] * c_prev + jnp.einsum(
+            "bjh,bjhd,bjhe->bhde", wj, k, v
+        )
+        n_new = cc[..., None] * n_prev + jnp.einsum("bjh,bjhd->bhd", wj, k)
+        m_new = f_cum[:, -1] + g_l
+        return (c_new, n_new, m_new), hout
+
+    xs = tuple(
+        a.reshape((b, nc, ll) + a.shape[2:]).swapaxes(0, 1)
+        for a in (qf, kf, vf, ig, fg)
+    )
+    carry, hs = jax.lax.scan(chunkf, init, xs, unroll=nc if unroll else 1)
+    hout = hs.swapaxes(0, 1).reshape(b, nc * ll, h, -1)[:, :s]
+    return hout, carry
+
+
+def mlstm_apply(ctx: RunCtx, cfg: XLSTMStatic, p: dict, x: jax.Array,
+                cache: dict | None = None):
+    b, s, d = x.shape
+    h, dk = cfg.n_heads, cfg.head_dim
+    di = cfg.d_inner
+    xn = norm_apply(cfg.norm, p["ln"], x)
+    up = linear_apply(ctx, p["w_up"], xn)
+    xi, z = up[..., :di], up[..., di:]
+
+    kk = cfg.conv_k
+    prefill = cache is None or s > 1
+    if prefill:
+        padded = jnp.pad(xi, ((0, 0), (kk - 1, 0), (0, 0)))
+        conv = sum(
+            padded[:, i : i + s, :] * p["conv_w"][:, i] for i in range(kk)
+        )
+        tail = xi[:, -(kk - 1) :].astype(jnp.float32)
+        if s < kk - 1:
+            tail = jnp.pad(tail, ((0, 0), (kk - 1 - s, 0), (0, 0)))
+        new_conv = tail.swapaxes(1, 2) if cache is not None else None
+    else:
+        win = jnp.concatenate(
+            [cache["conv"], xi.astype(jnp.float32).swapaxes(1, 2)], axis=-1
+        )
+        conv = jnp.sum(win * p["conv_w"][None], axis=-1)[:, None]
+        new_conv = win[..., 1:]
+    conv = jax.nn.silu(conv + p["conv_b"].astype(conv.dtype))
+
+    q = linear_apply(ctx, p["wq"], conv).reshape(b, s, h, dk)
+    k = linear_apply(ctx, p["wk"], conv).reshape(b, s, h, dk)
+    v = xi.reshape(b, s, h, dk)
+    gates = linear_apply(ctx, p["w_if"], conv).astype(jnp.float32)
+    ig, fg = gates[..., :h], jax.nn.log_sigmoid(gates[..., h:])
+    scale = dk**-0.5
+
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32) * scale
+    vf = v.astype(jnp.float32)
+    if prefill:
+        init = (
+            jnp.zeros((b, h, dk, dk), jnp.float32),
+            jnp.zeros((b, h, dk), jnp.float32),
+            jnp.full((b, h), -1e30, jnp.float32),
+        )
+        if cache is not None:
+            init = (cache["C"], cache["n"], cache["m"])
+        ht, (cmf, nmf, mmf) = _mlstm_chunkwise(
+            qf, kf, vf, ig, fg, init, scale, unroll=ctx.unroll_scans
+        )
+        new_cache = None
+        if cache is not None:
+            new_cache = {"conv": new_conv, "C": cmf, "n": nmf, "m": mmf}
+    else:
+        carry = (cache["C"], cache["n"], cache["m"])
+        carry, h1 = _mlstm_step(
+            carry, (qf[:, 0], kf[:, 0], vf[:, 0], ig[:, 0], fg[:, 0]), scale
+        )
+        ht = h1[:, None]
+        new_cache = {"conv": new_conv, "C": carry[0], "n": carry[1], "m": carry[2]}
+
+    hflat = ht.reshape(b, s, di)
+    hflat = rmsnorm_apply(p["gn"], hflat) + p["skip"] * conv.astype(jnp.float32)
+    out = hflat.astype(jnp.bfloat16) * jax.nn.silu(z)
+    y = linear_apply(ctx, p["w_down"], out)
+    y = ctx.act(y, "batch", "seq", "embed")
+    return x + y.astype(x.dtype), new_cache
+
+
+def mlstm_cache_init(cfg: XLSTMStatic, batch: int):
+    h, dk = cfg.n_heads, cfg.head_dim
+    return {
+        "conv": jnp.zeros((batch, cfg.d_inner, cfg.conv_k - 1), jnp.float32),
+        "C": jnp.zeros((batch, h, dk, dk), jnp.float32),
+        "n": jnp.zeros((batch, h, dk), jnp.float32),
+        "m": jnp.full((batch, h), -jnp.inf, jnp.float32),
+    }
+
+
+MLSTM_CACHE_SPECS = {
+    "conv": ("batch", "mlp", "conv"),
+    "C": ("batch", "state_heads", None, None),
+    "n": ("batch", "state_heads", None),
+    "m": ("batch", "state_heads"),
+}
+
+
+# ------------------------------------------------------------------ sLSTM
+
+def slstm_init(key, cfg: XLSTMStatic):
+    ks = jax.random.split(key, 4)
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.s_head_dim
+    p, s = {}, {}
+    p["ln"], s["ln"] = norm_init(cfg.norm, d)
+    p["w_in"], s["w_in"] = linear_init(ks[0], d, 4 * d, out_axis="mlp")
+    p["r"] = jax.random.normal(ks[1], (h, dh, 4 * dh), jnp.float32) * (dh**-0.5)
+    s["r"] = ("heads", "head_dim", "mlp")
+    p["gn"], s["gn"] = norm_init("rmsnorm", d)
+    dff = int(d * cfg.ffn_factor)
+    p["w_up"], s["w_up"] = linear_init(ks[2], d, 2 * dff, out_axis="mlp")
+    p["w_down"], s["w_down"] = linear_init(ks[3], dff, d, in_axis="mlp",
+                                           out_axis="embed")
+    return p, s
+
+
+def _slstm_step(carry, wx_t, r):
+    c, n, m, hp = carry  # [b,h,dh] each
+    rec = jnp.einsum("bhd,hde->bhe", hp, r)  # [b,h,4*dh]
+    pre = wx_t + rec
+    dh = c.shape[-1]
+    zi, ii, ff, oo = jnp.split(pre, 4, axis=-1)
+    ff = jax.nn.log_sigmoid(ff)
+    m_new = jnp.maximum(ff + m, ii)
+    i_p = jnp.exp(ii - m_new)
+    f_p = jnp.exp(ff + m - m_new)
+    c_new = f_p * c + i_p * jnp.tanh(zi)
+    n_new = f_p * n + i_p
+    h_new = jax.nn.sigmoid(oo) * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, m_new, h_new), h_new
+
+
+def slstm_apply(ctx: RunCtx, cfg: XLSTMStatic, p: dict, x: jax.Array,
+                cache: dict | None = None):
+    b, s, d = x.shape
+    h, dh = cfg.n_heads, cfg.s_head_dim
+    xn = norm_apply(cfg.norm, p["ln"], x)
+    wx = linear_apply(ctx, p["w_in"], xn).astype(jnp.float32)
+    wx = wx.reshape(b, s, h, 4 * dh)
+
+    if cache is None or s > 1:
+        z0 = jnp.zeros((b, h, dh), jnp.float32)
+        init = (z0, z0, jnp.full((b, h, dh), -jnp.inf, jnp.float32), z0)
+        if cache is not None:
+            init = (cache["c"], cache["n"], cache["m"], cache["h"])
+        carry, hs = jax.lax.scan(
+            lambda c, i: _slstm_step(c, i, p["r"]), init, wx.transpose(1, 0, 2, 3)
+        )
+        ht = hs.transpose(1, 0, 2, 3).reshape(b, s, d)
+        new_cache = (
+            {"c": carry[0], "n": carry[1], "m": carry[2], "h": carry[3]}
+            if cache is not None
+            else None
+        )
+    else:
+        carry = (cache["c"], cache["n"], cache["m"], cache["h"])
+        carry, h1 = _slstm_step(carry, wx[:, 0], p["r"])
+        ht = h1.reshape(b, 1, d)
+        new_cache = {"c": carry[0], "n": carry[1], "m": carry[2], "h": carry[3]}
+
+    y1 = rmsnorm_apply(p["gn"], ht).astype(x.dtype)
+    x = x + y1
+    # post sLSTM FFN (GeGLU, pf = 4/3)
+    up = linear_apply(ctx, p["w_up"], x)
+    dff = up.shape[-1] // 2
+    y2 = linear_apply(ctx, p["w_down"], jax.nn.gelu(up[..., :dff]) * up[..., dff:])
+    y2 = ctx.act(y2, "batch", "seq", "embed")
+    return x + y2.astype(x.dtype), new_cache
+
+
+def slstm_cache_init(cfg: XLSTMStatic, batch: int):
+    h, dh = cfg.n_heads, cfg.s_head_dim
+    z = jnp.zeros((batch, h, dh), jnp.float32)
+    return {"c": z, "n": z, "m": jnp.full((batch, h, dh), -jnp.inf), "h": z}
+
+
+SLSTM_CACHE_SPECS = {
+    "c": ("batch", "state_heads", None),
+    "n": ("batch", "state_heads", None),
+    "m": ("batch", "state_heads", None),
+    "h": ("batch", "state_heads", None),
+}

@@ -1,0 +1,463 @@
+"""Pattern-based LM family covering all assigned architectures.
+
+A model is a sequence of *segments*: maximal runs of identical block kinds
+(attention+FFN/MoE, Mamba2, mLSTM, sLSTM, Zamba shared block). Runs with
+n > 1 keep their parameters stacked along a leading layer axis and execute
+under ``jax.lax.scan`` (compact HLO => tractable 512-device SPMD compiles
+even for 94-layer MoE models), optionally rematerialized.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers import attention as attn_mod
+from repro.layers import ffn as ffn_mod
+from repro.layers import moe as moe_mod
+from repro.layers import ssm as ssm_mod
+from repro.layers import xlstm as xl_mod
+from repro.layers.common import (
+    RunCtx,
+    embed_init,
+    linear_apply,
+    linear_init,
+    norm_apply,
+    norm_init,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # dense | moe | audio | hybrid | ssm | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0
+    # attention
+    attn_pattern: str = "full"  # full | swa | local_global
+    window: int = 4096
+    lg_ratio: int = 5  # N local per 1 global
+    rope_theta: float = 1e4
+    rope_theta_global: float = 1e6
+    mrope: bool = False
+    causal: bool = True
+    qk_norm: bool = False
+    use_bias: bool = False
+    # ffn
+    ffn_kind: str = "swiglu"
+    norm: str = "rmsnorm"
+    # moe
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    moe_shard: str = "ep"  # ep | tp (drives sharding rules)
+    # ssm / hybrid
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    shared_attn_every: int = 0  # zamba2
+    slstm_at: tuple = ()  # xlstm
+    # frontends
+    frontend: str = "none"  # none | audio | vision
+    frontend_dim: int = 0
+    n_vis_tokens: int = 64
+    # misc
+    tie_embeddings: bool = False
+    remat: bool = True
+    # capabilities (drive dry-run cell selection; see DESIGN.md)
+    supports_decode: bool = True
+    subquadratic: bool = False
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    kind: str  # attn | moe_attn | mamba | mlstm | slstm | zshared
+    n: int
+    attn: attn_mod.AttnStatic | None = None
+    mamba: ssm_mod.MambaStatic | None = None
+    xl: xl_mod.XLSTMStatic | None = None
+
+
+def _attn_static(cfg: ArchConfig, is_global: bool = False) -> attn_mod.AttnStatic:
+    window = 0
+    if cfg.attn_pattern == "swa":
+        window = cfg.window
+    elif cfg.attn_pattern == "local_global":
+        window = 0 if is_global else cfg.window
+    return attn_mod.AttnStatic(
+        d_model=cfg.d_model,
+        n_heads=cfg.n_heads,
+        n_kv=cfg.n_kv_heads,
+        head_dim=cfg.hd,
+        causal=cfg.causal,
+        window=window,
+        rope_theta=cfg.rope_theta_global if is_global else cfg.rope_theta,
+        use_rope=cfg.family != "audio",
+        mrope=cfg.mrope,
+        qk_norm=cfg.qk_norm,
+        use_bias=cfg.use_bias,
+        norm=cfg.norm,
+    )
+
+
+def build_segments(cfg: ArchConfig) -> list[Segment]:
+    att_kind = "moe_attn" if cfg.n_experts else "attn"
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        if cfg.attn_pattern == "local_global":
+            kinds = [
+                ("attn_g" if (i % (cfg.lg_ratio + 1)) == cfg.lg_ratio else "attn_l")
+                for i in range(cfg.n_layers)
+            ]
+            segs: list[Segment] = []
+            i = 0
+            while i < cfg.n_layers:
+                j = i
+                while j < cfg.n_layers and kinds[j] == kinds[i]:
+                    j += 1
+                segs.append(
+                    Segment(
+                        att_kind,
+                        j - i,
+                        attn=_attn_static(cfg, is_global=kinds[i] == "attn_g"),
+                    )
+                )
+                i = j
+            return segs
+        return [Segment(att_kind, cfg.n_layers, attn=_attn_static(cfg))]
+    if cfg.family == "ssm":
+        xl = xl_mod.XLSTMStatic(d_model=cfg.d_model, n_heads=cfg.n_heads,
+                                norm=cfg.norm)
+        kinds = [
+            "slstm" if i in cfg.slstm_at else "mlstm" for i in range(cfg.n_layers)
+        ]
+        segs = []
+        i = 0
+        while i < cfg.n_layers:
+            j = i
+            while j < cfg.n_layers and kinds[j] == kinds[i]:
+                j += 1
+            segs.append(Segment(kinds[i], j - i, xl=xl))
+            i = j
+        return segs
+    if cfg.family == "hybrid":
+        mst = ssm_mod.MambaStatic(
+            d_model=cfg.d_model,
+            n_heads=2 * cfg.d_model // cfg.ssm_head_dim,
+            head_dim=cfg.ssm_head_dim,
+            d_state=cfg.ssm_state,
+            norm=cfg.norm,
+        )
+        segs = []
+        left = cfg.n_layers
+        k = cfg.shared_attn_every
+        while left > 0:
+            take = min(k, left)
+            segs.append(Segment("mamba", take, mamba=mst))
+            left -= take
+            if left > 0 or take == k:
+                segs.append(Segment("zshared", 1, attn=_attn_static(cfg)))
+        return segs
+    raise ValueError(cfg.family)
+
+
+# ---------------------------------------------------------------- init
+
+def _block_init(key, cfg: ArchConfig, seg: Segment):
+    if seg.kind in ("attn", "moe_attn"):
+        k1, k2 = jax.random.split(key)
+        p, s = {}, {}
+        p["attn"], s["attn"] = attn_mod.attn_init(k1, seg.attn)
+        if seg.kind == "moe_attn":
+            p["moe"], s["moe"] = moe_mod.moe_init(
+                k2, cfg.d_model, cfg.d_ff, cfg.n_experts, cfg.ffn_kind, cfg.norm
+            )
+        else:
+            p["ffn"], s["ffn"] = ffn_mod.ffn_init(
+                k2, cfg.d_model, cfg.d_ff, cfg.ffn_kind, cfg.norm, cfg.use_bias
+            )
+        return p, s
+    if seg.kind == "mamba":
+        return ssm_mod.mamba_init(key, seg.mamba)
+    if seg.kind == "mlstm":
+        return xl_mod.mlstm_init(key, seg.xl)
+    if seg.kind == "slstm":
+        return xl_mod.slstm_init(key, seg.xl)
+    raise ValueError(seg.kind)
+
+
+def _zshared_init(key, cfg: ArchConfig):
+    ks = jax.random.split(key, 4)
+    p, s = {}, {}
+    p["w_in"], s["w_in"] = linear_init(ks[0], 2 * cfg.d_model, cfg.d_model)
+    p["attn"], s["attn"] = attn_mod.attn_init(ks[1], _attn_static(cfg))
+    p["ffn"], s["ffn"] = ffn_mod.ffn_init(
+        ks[2], cfg.d_model, cfg.d_ff, cfg.ffn_kind, cfg.norm
+    )
+    p["w_out"], s["w_out"] = linear_init(ks[3], cfg.d_model, cfg.d_model)
+    return p, s
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_model(key, cfg: ArchConfig):
+    """Returns (params, specs). Pure; usable under jax.eval_shape."""
+    segments = build_segments(cfg)
+    keys = jax.random.split(key, len(segments) + 4)
+    params: dict[str, Any] = {}
+    specs: dict[str, Any] = {}
+    params["embed"], specs["embed"] = embed_init(
+        keys[-1], cfg.vocab_size, cfg.d_model
+    )
+    if cfg.frontend != "none":
+        params["front_proj"], specs["front_proj"] = linear_init(
+            keys[-2], cfg.frontend_dim, cfg.d_model
+        )
+    seg_params, seg_specs = [], []
+    for i, seg in enumerate(segments):
+        if seg.kind == "zshared":
+            seg_params.append({})
+            seg_specs.append({})
+            continue
+        if seg.n == 1:
+            p, s = _block_init(keys[i], cfg, seg)
+        else:
+            ps = [
+                _block_init(k, cfg, seg)
+                for k in jax.random.split(keys[i], seg.n)
+            ]
+            p = _stack([x[0] for x in ps])
+            s = jax.tree.map(
+                lambda ax: ("layers",) + ax,
+                ps[0][1],
+                is_leaf=lambda x: isinstance(x, tuple),
+            )
+        seg_params.append(p)
+        seg_specs.append(s)
+    params["segments"] = seg_params
+    specs["segments"] = seg_specs
+    if any(s.kind == "zshared" for s in segments):
+        params["shared"], specs["shared"] = _zshared_init(keys[-3], cfg)
+    params["final_ln"], specs["final_ln"] = norm_init(cfg.norm, cfg.d_model)
+    if not cfg.tie_embeddings:
+        params["lm_head"], specs["lm_head"] = linear_init(
+            keys[-4], cfg.d_model, cfg.vocab_size, out_axis="vocab"
+        )
+    return params, specs
+
+
+# --------------------------------------------------------------- caches
+
+def _block_cache(cfg: ArchConfig, seg: Segment, batch: int, max_len: int):
+    if seg.kind in ("attn", "moe_attn", "zshared"):
+        return attn_mod.attn_cache_init(seg.attn, batch, max_len)
+    if seg.kind == "mamba":
+        return ssm_mod.mamba_cache_init(seg.mamba, batch)
+    if seg.kind == "mlstm":
+        return xl_mod.mlstm_cache_init(seg.xl, batch)
+    if seg.kind == "slstm":
+        return xl_mod.slstm_cache_init(seg.xl, batch)
+    raise ValueError(seg.kind)
+
+
+def _block_cache_specs(seg: Segment):
+    if seg.kind in ("attn", "moe_attn", "zshared"):
+        return attn_mod.ATTN_CACHE_SPECS
+    if seg.kind == "mamba":
+        return ssm_mod.MAMBA_CACHE_SPECS
+    if seg.kind == "mlstm":
+        return xl_mod.MLSTM_CACHE_SPECS
+    if seg.kind == "slstm":
+        return xl_mod.SLSTM_CACHE_SPECS
+    raise ValueError(seg.kind)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int):
+    """Decode caches per segment (stacked along the layer axis for runs)."""
+    caches = []
+    for seg in build_segments(cfg):
+        c = _block_cache(cfg, seg, batch, max_len)
+        if seg.n > 1:
+            c = jax.tree.map(lambda x: jnp.broadcast_to(x, (seg.n,) + x.shape), c)
+        caches.append(c)
+    return caches
+
+
+def cache_specs(cfg: ArchConfig):
+    out = []
+    for seg in build_segments(cfg):
+        s = dict(_block_cache_specs(seg))
+        if seg.n > 1:
+            s = {k: ("layers",) + v for k, v in s.items()}
+        out.append(s)
+    return out
+
+
+# -------------------------------------------------------------- forward
+
+def _block_apply(ctx, cfg, seg: Segment, p, x, positions, cache, pos, shared, x0):
+    if seg.kind in ("attn", "moe_attn"):
+        x, nc = attn_mod.attn_apply(ctx, seg.attn, p["attn"], x, positions,
+                                    cache, pos)
+        if seg.kind == "moe_attn":
+            x = moe_mod.moe_apply(
+                ctx, cfg.ffn_kind, cfg.norm, p["moe"], x, cfg.top_k,
+                cfg.capacity_factor,
+            )
+        else:
+            x = ffn_mod.ffn_apply(ctx, cfg.ffn_kind, cfg.norm, p["ffn"], x)
+        return x, nc
+    if seg.kind == "mamba":
+        return ssm_mod.mamba_apply(ctx, seg.mamba, p, x, cache)
+    if seg.kind == "mlstm":
+        return xl_mod.mlstm_apply(ctx, seg.xl, p, x, cache)
+    if seg.kind == "slstm":
+        return xl_mod.slstm_apply(ctx, seg.xl, p, x, cache)
+    if seg.kind == "zshared":
+        h = linear_apply(ctx, shared["w_in"],
+                         jnp.concatenate([x, x0], axis=-1))
+        h, nc = attn_mod.attn_apply(ctx, seg.attn, shared["attn"], h,
+                                    positions, cache, pos)
+        h = ffn_mod.ffn_apply(ctx, cfg.ffn_kind, cfg.norm, shared["ffn"], h)
+        return x + linear_apply(ctx, shared["w_out"], h).astype(x.dtype), nc
+    raise ValueError(seg.kind)
+
+
+def _run_segment(ctx, cfg, seg: Segment, p, x, positions, cache, pos, shared, x0):
+    if seg.n == 1 or seg.kind == "zshared":
+        return _block_apply(ctx, cfg, seg, p, x, positions, cache, pos,
+                            shared, x0)
+
+    def body(carry, xs):
+        if cache is None:
+            pl, cl = xs, None
+        else:
+            pl, cl = xs
+        y, nc = _block_apply(ctx, cfg, seg, pl, carry, positions, cl, pos,
+                             shared, x0)
+        return y, nc
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    xs = p if cache is None else (p, cache)
+    x, ncs = jax.lax.scan(body, x, xs)
+    return x, ncs
+
+
+def embed_inputs(ctx: RunCtx, cfg: ArchConfig, params, batch):
+    if cfg.frontend == "audio":
+        x = linear_apply(ctx, params["front_proj"], batch["emb"])
+        s = x.shape[1]
+        # sinusoidal positions (frontend stub; HuBERT's conv-pos simplified)
+        pos = jnp.arange(s)
+        dim = cfg.d_model
+        inv = 1.0 / (10000 ** (jnp.arange(0, dim, 2) / dim))
+        pe = jnp.concatenate(
+            [jnp.sin(pos[:, None] * inv), jnp.cos(pos[:, None] * inv)], -1
+        )
+        return (x + pe[None].astype(x.dtype)).astype(jnp.bfloat16)
+    x = jnp.take(params["embed"]["emb"].astype(jnp.bfloat16), batch["ids"],
+                 axis=0)
+    if cfg.frontend == "vision" and "vis_emb" in batch:
+        v = linear_apply(ctx, params["front_proj"], batch["vis_emb"])
+        nv = v.shape[1]
+        x = jnp.concatenate([v.astype(x.dtype), x[:, nv:]], axis=1)
+    return x
+
+
+def forward(
+    params,
+    cfg: ArchConfig,
+    ctx: RunCtx,
+    batch: dict,
+    caches=None,
+    pos=None,
+    return_hidden: bool = False,
+):
+    """batch: {'ids' | 'emb', optional 'positions'}. Returns
+    (logits_or_hidden, new_caches)."""
+    segments = build_segments(cfg)
+    x = embed_inputs(ctx, cfg, params, batch)
+    x = ctx.act(x, "batch", "seq", "embed")
+    b, s, _ = x.shape
+    if "positions" in batch:
+        positions = batch["positions"]
+    elif pos is not None:
+        positions = jnp.broadcast_to(jnp.asarray(pos)[None, None], (b, s))
+    else:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x0 = x
+    new_caches = []
+    for i, seg in enumerate(segments):
+        c = caches[i] if caches is not None else None
+        x, nc = _run_segment(
+            ctx, cfg, seg, params["segments"][i], x, positions, c, pos,
+            params.get("shared"), x0,
+        )
+        new_caches.append(nc)
+    x = norm_apply(cfg.norm, params["final_ln"], x)
+    if return_hidden:
+        return x, new_caches
+    logits = _head(ctx, cfg, params, x)
+    return logits, new_caches
+
+
+def _head(ctx, cfg, params, x):
+    if cfg.tie_embeddings:
+        w = params["embed"]["emb"].astype(jnp.bfloat16).T
+        logits = jnp.matmul(x, w)
+    else:
+        logits = linear_apply(ctx, params["lm_head"], x)
+    return ctx.act(logits, "batch", "seq", "vocab")
+
+
+def lm_loss(params, cfg: ArchConfig, ctx: RunCtx, batch, chunk: int = 1024):
+    """Mean CE over labeled tokens, computed in sequence chunks to avoid
+    materialising the full [B, S, V] f32 softmax."""
+    hidden, _ = forward(params, cfg, ctx, batch, return_hidden=True)
+    labels = batch["labels"]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones(labels.shape, jnp.float32)
+    b, s, d = hidden.shape
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    nc = (s + pad) // chunk
+    hc = hidden.reshape(b, nc, chunk, d).swapaxes(0, 1)
+    lc = labels.reshape(b, nc, chunk).swapaxes(0, 1)
+    mc = mask.reshape(b, nc, chunk).swapaxes(0, 1)
+
+    def one(args):
+        h, l, m = args
+        logits = _head(ctx, cfg, params, h).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, l[..., None], axis=-1)[..., 0]
+        return jnp.sum((lse - gold) * m), jnp.sum(m)
+
+    tot, cnt = jax.lax.map(one, (hc, lc, mc))
+    return jnp.sum(tot) / jnp.maximum(jnp.sum(cnt), 1.0)
+
+
+def decode_step(params, cfg: ArchConfig, ctx: RunCtx, ids, pos, caches):
+    """One decode step. ids [B, 1]; pos scalar int32 (current position).
+    Returns (logits [B, V], new_caches)."""
+    batch = {"ids": ids}
+    logits, new_caches = forward(params, cfg, ctx, batch, caches=caches, pos=pos)
+    return logits[:, -1], new_caches

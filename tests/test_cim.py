@@ -1,0 +1,167 @@
+"""Analog CTT-CIM simulation: invariants + hypothesis property tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cim, mx as mxlib
+
+
+def _setup(seed=0, t=8, k=96, m=16, xscale=1.0):
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal((t, k)) * xscale).astype(np.float32)
+    w = rng.standard_normal((k, m)).astype(np.float32)
+    return jnp.asarray(x), mxlib.quantize_w(jnp.asarray(w)), jnp.asarray(w)
+
+
+def _mx_ref(x, wq, k):
+    """Digital MXFP4 oracle: exact dot of the quantized operands."""
+    xq = mxlib.quantize(x[..., :k])
+    return np.asarray(mxlib.dequantize(xq, out_len=k)) @ np.asarray(
+        mxlib.dequantize_w(wq)
+    )
+
+
+def test_bitplane_decomposition_exact():
+    rng = np.random.default_rng(1)
+    cx = jnp.asarray(rng.integers(-12, 13, size=(5, 32)), jnp.int8)
+    cw = jnp.asarray(rng.integers(-12, 13, size=(5, 32)), jnp.int8)
+    direct = np.sum(
+        np.asarray(cx, np.int64) * np.asarray(cw, np.int64), axis=-1
+    ).astype(np.float64)
+    bp = np.asarray(cim.bitplane_dot(cx, cw), np.float64)
+    np.testing.assert_array_equal(bp, direct)
+
+
+def test_wide_window_no_adc_matches_digital_mxfp4():
+    """With a huge CM budget and no ADC, the analog path must be *exactly*
+    the digital MXFP4 matmul (alignment is lossless in-window)."""
+    x, wq, _ = _setup()
+    cfg = cim.CIMConfig(adc_bits=None, cm_bits=64, two_pass=False)
+    calib = cim.calibrate_rowhist([x], wq, cfg)
+    y, _ = cim.cim_linear(x, wq, cfg, calib)
+    ref = _mx_ref(x, wq, 96)
+    np.testing.assert_allclose(np.asarray(y), ref, rtol=1e-6, atol=1e-6)
+
+
+def test_rowhist_eliminates_overflow():
+    x, wq, _ = _setup(seed=2, xscale=3.0)
+    cfg = cim.CIMConfig(adc_bits=None, cm_bits=3, collect_stats=True)
+    calib = cim.calibrate_rowhist([x], wq, cfg)
+    _, stats = cim.cim_linear(x, wq, cfg, calib)
+    assert float(stats["overflow_rate"]) == 0.0
+
+
+def test_two_pass_equals_double_cm_single_pass():
+    """Row-Hist 2-pass at CM bits == single pass at 2*CM bits when the ADC
+    is ideal (paper Fig 5: '2-Pass is effectively identical at half the CM
+    correction bits')."""
+    x, wq, _ = _setup(seed=3)
+    cfg2 = cim.CIMConfig(adc_bits=None, cm_bits=3, two_pass=True)
+    cfg1 = cim.CIMConfig(adc_bits=None, cm_bits=6, two_pass=False)
+    calib = cim.calibrate_rowhist([x], wq, cfg2)
+    y2, _ = cim.cim_linear(x, wq, cfg2, calib)
+    y1, _ = cim.cim_linear(x, wq, cfg1, calib)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y1), rtol=1e-6, atol=1e-6)
+
+
+def test_more_cm_bits_never_hurts():
+    """Monotonicity: the set of exactly-represented blocks grows with CM."""
+    x, wq, _ = _setup(seed=4)
+    ref = _mx_ref(x, wq, 96)
+    errs = []
+    for cmb in (0, 1, 2, 3, 5, 8):
+        cfg = cim.CIMConfig(adc_bits=None, cm_bits=cmb, two_pass=False)
+        calib = cim.calibrate_rowhist([x], wq, cfg)
+        y, _ = cim.cim_linear(x, wq, cfg, calib)
+        errs.append(float(np.mean((np.asarray(y) - ref) ** 2)))
+    assert all(a >= b - 1e-12 for a, b in zip(errs, errs[1:])), errs
+
+
+def test_underflow_rate_decreases_with_cm():
+    x, wq, _ = _setup(seed=5)
+    rates = []
+    for cmb in (0, 2, 4, 8):
+        cfg = cim.CIMConfig(adc_bits=None, cm_bits=cmb, collect_stats=True)
+        calib = cim.calibrate_rowhist([x], wq, cfg)
+        _, stats = cim.cim_linear(x, wq, cfg, calib)
+        rates.append(float(stats["underflow_rate_p1"]))
+    assert all(a >= b for a, b in zip(rates, rates[1:])), rates
+
+
+def test_unsigned_bias_column_equivalence():
+    """Signed-weight path == unsigned [0,24] weights + bias column."""
+    x, wq, _ = _setup(seed=6)
+    for cmb, adc in ((3, None), (3, 10), (2, 8)):
+        cfg = cim.CIMConfig(adc_bits=adc, cm_bits=cmb, two_pass=True)
+        calib = cim.calibrate_rowhist([x], wq, cfg)
+        y_s, _ = cim.cim_linear(x, wq, cfg, calib)
+        y_u = cim.cim_linear_unsigned(x, wq, cfg, calib)
+        np.testing.assert_allclose(np.asarray(y_s), np.asarray(y_u), rtol=1e-6)
+
+
+def test_adc_quantization_bounds():
+    """ADC output is on the uniform grid and |err| <= delta/2 in-range."""
+    x, wq, _ = _setup(seed=7)
+    cfg0 = cim.CIMConfig(adc_bits=None, cm_bits=6, two_pass=False)
+    cfg10 = cim.CIMConfig(adc_bits=10, cm_bits=6, two_pass=False)
+    calib = cim.calibrate_rowhist([x], wq, cfg0)
+    y0, _ = cim.cim_linear(x, wq, cfg0, calib)
+    y10, _ = cim.cim_linear(x, wq, cfg10, calib)
+    delta = float(calib.adc_fs) / 2**9 * float(mxlib.exp2i(calib.e_n)) * 0.25
+    assert np.max(np.abs(np.asarray(y10) - np.asarray(y0))) <= delta * 0.5 + 1e-7
+
+
+def test_adc_more_bits_better():
+    x, wq, _ = _setup(seed=8, t=16)
+    ref = _mx_ref(x, wq, 96)
+    errs = []
+    for bits in (6, 8, 10, 12):
+        cfg = cim.CIMConfig(adc_bits=bits, cm_bits=3, two_pass=True)
+        calib = cim.calibrate_rowhist([x], wq, cfg)
+        y, _ = cim.cim_linear(x, wq, cfg, calib)
+        errs.append(float(np.sqrt(np.mean((np.asarray(y) - ref) ** 2))))
+    assert errs[0] > errs[2] and errs[1] > errs[3] * 0.99, errs
+
+
+def test_online_strategies_run_and_are_worse():
+    """Row0 / RowOpt online strategies underperform Row-Hist (Fig 5)."""
+    x, wq, _ = _setup(seed=9, t=32)
+    ref = _mx_ref(x, wq, 96)
+
+    def err(cfg, calib=None):
+        y, _ = cim.cim_linear(x, wq, cfg, calib)
+        return float(np.mean((np.asarray(y) - ref) ** 2))
+
+    cfg_rh = cim.CIMConfig(adc_bits=None, cm_bits=3, two_pass=True)
+    calib = cim.calibrate_rowhist([x], wq, cfg_rh)
+    e_rh = err(cfg_rh, calib)
+    e_r0 = err(cim.CIMConfig(adc_bits=None, cm_bits=3, strategy="row0"))
+    e_ro = err(cim.CIMConfig(adc_bits=None, cm_bits=3, strategy="row_opt"))
+    assert e_rh <= e_r0 and e_rh <= e_ro, (e_rh, e_r0, e_ro)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(0, 4), st.sampled_from([None, 10]))
+def test_property_no_overflow_and_finite(seed, cmb, adc):
+    """Under Row-Hist calibration on the same data: zero overflow events,
+    finite outputs, and error decreases vs no mirror budget."""
+    x, wq, _ = _setup(seed=seed, t=4, k=64, m=8,
+                      xscale=10.0 ** ((seed % 5) - 2))
+    cfg = cim.CIMConfig(adc_bits=adc, cm_bits=cmb, collect_stats=True)
+    calib = cim.calibrate_rowhist([x], wq, cfg)
+    y, stats = cim.cim_linear(x, wq, cfg, calib)
+    assert np.all(np.isfinite(np.asarray(y)))
+    assert float(stats["overflow_rate"]) == 0.0
+
+
+def test_jit_compatible():
+    x, wq, _ = _setup(seed=10)
+    cfg = cim.CIMConfig(adc_bits=10, cm_bits=3)
+    calib = cim.calibrate_rowhist([x], wq, cfg)
+    f = jax.jit(lambda xx: cim.cim_linear(xx, wq, cfg, calib)[0])
+    y1 = f(x)
+    y2, _ = cim.cim_linear(x, wq, cfg, calib)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-6)

@@ -1,0 +1,98 @@
+"""Analytical hardware model vs the paper's published numbers."""
+
+import pytest
+
+from repro.hwmodel import perf, specs as S
+
+
+def rel(a, b):
+    return abs(a - b) / abs(b)
+
+
+def test_macro_tops_table3():
+    assert rel(perf.macro_tops(768), 20.02) < 0.02
+    assert rel(perf.macro_tops(1024), 35.72) < 0.02
+
+
+def test_macro_storage_density():
+    # §6: 1024x1024 CTT arrays reach ~1756 kb/mm^2
+    assert rel(perf.storage_density_kb_mm2(1024), 1756) < 0.02
+    # §6 claim: >= 50x the TSMC gain-cell macro (~34 kb/mm^2)
+    assert perf.storage_density_kb_mm2(1024) / 34 > 50
+
+
+def test_system_area_table4():
+    assert rel(perf.system_area_mm2(S.BASE), 376.3) < 0.005
+    assert rel(perf.system_area_mm2(S.LARGE), 561.5) < 0.005
+
+
+def test_system_peak_tops_table4():
+    assert rel(perf.system_peak_tops(S.BASE), 1515.14) < 0.03
+    assert rel(perf.system_peak_tops(S.LARGE), 2631.56) < 0.03
+
+
+def test_system_power_table4():
+    t4 = perf.table4()
+    assert rel(t4["base"]["power_w"], 163.16) < 0.05
+    # Large peak-point utilization model deviates ~8% (documented)
+    assert rel(t4["large"]["power_w"], 182.61) < 0.10
+
+
+def test_n_balance():
+    # paper: TOPS peaks at N=256 (Base) / N=192 (Large), approximate
+    assert 200 <= perf.n_balance(S.BASE) <= 320
+    assert 150 <= perf.n_balance(S.LARGE) <= 240
+
+
+@pytest.mark.parametrize("name", sorted(S.PAPER_TABLE7))
+def test_table7_fps(name):
+    w = S.WORKLOADS[name]
+    paper_fps = S.PAPER_TABLE7[name][1]
+    assert rel(perf.fps(w), paper_fps) < 0.05, (perf.fps(w), paper_fps)
+
+
+@pytest.mark.parametrize("name", sorted(S.PAPER_TABLE7))
+def test_table7_tops(name):
+    w = S.WORKLOADS[name]
+    paper_tops = S.PAPER_TABLE7[name][2]
+    assert rel(perf.tops(w) * w.chips / w.chips, paper_tops) < 0.08
+
+
+@pytest.mark.parametrize("name", sorted(S.PAPER_TABLE7))
+def test_table7_power(name):
+    w = S.WORKLOADS[name]
+    paper_w = S.PAPER_TABLE7[name][0]
+    assert rel(perf.model_power_w(w), paper_w) < 0.20  # documented tolerance
+
+
+@pytest.mark.parametrize("name", sorted(S.PAPER_TABLE1))
+def test_table1_io_penalty(name):
+    w = S.WORKLOADS[name]
+    pm, bm, p1 = perf.io_penalty(w)
+    paper_pm, paper_bm, paper_p1 = S.PAPER_TABLE1[name]
+    assert rel(pm, paper_pm) < 0.05
+    assert rel(bm, paper_bm) < 0.05
+    assert rel(p1, paper_p1) < 0.05
+
+
+def test_fig12_shape():
+    rows = perf.fig12_sweep()
+    # analog-bound below balance, digital-bound above; TOPS peaks near N_bal
+    tops = [r["tops"] for r in rows]
+    peak_n = rows[tops.index(max(tops))]["N"]
+    assert 128 <= peak_n <= 320
+    # TOPS rises then falls
+    assert tops[0] < max(tops) and tops[-1] < max(tops)
+
+
+def test_2pass_halves_analog_throughput():
+    assert rel(perf.analog_tops(S.BASE, passes=1),
+               2 * perf.analog_tops(S.BASE, passes=2)) < 1e-9
+
+
+def test_ctt_density_advantage_table2():
+    # CTT >= 1.5x denser than ReRAM/PCM/FeRAM per stored bit
+    ctt = S.NVM["ctt"]["cell_f2"] / S.NVM["ctt"]["max_bits"]
+    for other in ("reram", "pcm", "feram"):
+        o = S.NVM[other]["cell_f2"] / S.NVM[other]["max_bits"]
+        assert o / ctt >= 1.5

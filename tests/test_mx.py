@@ -1,0 +1,168 @@
+"""MXFP4 numerics: unit + hypothesis property tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import mx as mxlib
+
+jax.config.update("jax_enable_x64", False)
+
+FP4_VALUES = np.array([0, 0.5, 1, 1.5, 2, 3, 4, 6])
+ALL_FP4 = np.concatenate([FP4_VALUES, -FP4_VALUES[1:]])
+
+
+def test_e2m1_grid_exact():
+    """Every representable FP4 value quantizes to itself."""
+    codes = mxlib.quantize_e2m1(jnp.asarray(ALL_FP4, jnp.float32))
+    np.testing.assert_array_equal(np.asarray(codes), (ALL_FP4 * 2).astype(np.int8))
+
+
+def test_e2m1_ties_to_even():
+    # tie points: 0.25->0 or 0.5? ties-to-even on local grid (0.0 even)
+    x = jnp.asarray([0.25, 0.75, 1.25, 1.75, 2.5, 3.5, 5.0], jnp.float32)
+    codes = mxlib.quantize_e2m1(x)
+    np.testing.assert_array_equal(
+        np.asarray(codes), np.array([0, 2, 2, 4, 4, 8, 8], np.int8)
+    )
+
+
+def test_e2m1_clamps_at_6():
+    codes = mxlib.quantize_e2m1(jnp.asarray([7.9, -100.0], jnp.float32))
+    np.testing.assert_array_equal(np.asarray(codes), np.array([12, -12], np.int8))
+
+
+def test_roundtrip_exact_for_representable():
+    """x = fp4 * 2^e round-trips exactly through quantize/dequantize."""
+    rng = np.random.default_rng(0)
+    e = rng.integers(-20, 20, size=(8, 1))
+    vals = rng.choice(ALL_FP4, size=(8, 32))
+    # force the max element to 4 or 6 so the block scale is recovered
+    vals[:, 0] = 6.0
+    x = vals * (2.0**e)
+    out = mxlib.dequantize(mxlib.quantize(jnp.asarray(x, jnp.float32)))
+    np.testing.assert_allclose(np.asarray(out), x, rtol=0, atol=0)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 4))
+def test_quant_error_bound(seed, rows):
+    """|x - Q(x)| <= step/2 where step is the local grid step at scale."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((rows, 32)).astype(np.float32) * 10 ** rng.uniform(-3, 3)
+    q = mxlib.quantize(jnp.asarray(x))
+    deq = np.asarray(mxlib.dequantize(q))
+    scale = 2.0 ** np.asarray(q.exps, np.float32)
+    amax = np.abs(x).reshape(rows, 32).max(-1, keepdims=True)
+    # max grid step = 2 * scale (top binade); plus scale floor => bound
+    err = np.abs(deq - x)
+    bound = np.where(np.abs(x) >= 4 * scale, 1.0 * scale, 0.5 * scale) + 1e-7
+    # elements in the clamp region (> 6*scale) can err up to amax - 6*scale
+    clamp = np.maximum(np.abs(x) - 6 * scale, 0)
+    assert np.all(err <= bound + clamp + 1e-6 * amax)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_scale_is_floor_log2_rule(seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((4, 64)).astype(np.float32)
+    q = mxlib.quantize(jnp.asarray(x))
+    amax = np.abs(x).reshape(4, 2, 32).max(-1)
+    expect = np.floor(np.log2(amax)) - mxlib.EMAX_ELEM
+    np.testing.assert_array_equal(np.asarray(q.exps, np.float64), expect)
+
+
+def test_zero_block():
+    q = mxlib.quantize(jnp.zeros((2, 32)))
+    assert np.all(np.asarray(q.codes) == 0)
+    out = mxlib.dequantize(q)
+    assert np.all(np.asarray(out) == 0)
+
+
+def test_padding_non_multiple_of_32():
+    x = np.random.default_rng(1).standard_normal((3, 80)).astype(np.float32)
+    q = mxlib.quantize(jnp.asarray(x))
+    assert q.codes.shape == (3, 96) and q.exps.shape == (3, 3)
+    out = mxlib.dequantize(q, out_len=80)
+    assert out.shape == (3, 80)
+    # padded tail quantizes to zero codes
+    assert np.all(np.asarray(q.codes)[:, 80:] == 0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_pack_unpack_roundtrip(seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((2, 64)).astype(np.float32)
+    q = mxlib.quantize(jnp.asarray(x))
+    packed = mxlib.pack_codes(q.codes)
+    assert packed.shape == (2, 32) and packed.dtype == jnp.uint8
+    np.testing.assert_array_equal(
+        np.asarray(mxlib.unpack_codes(packed)), np.asarray(q.codes)
+    )
+
+
+def test_unsigned_weight_encoding_roundtrip():
+    x = np.random.default_rng(2).standard_normal((4, 32)).astype(np.float32)
+    q = mxlib.quantize(jnp.asarray(x))
+    u = mxlib.encode_weight_unsigned(q)
+    assert u.dtype == jnp.uint8
+    assert np.all(np.asarray(u) >= 0) and np.all(np.asarray(u) <= 24)
+    np.testing.assert_array_equal(
+        np.asarray(mxlib.decode_weight_unsigned(u)), np.asarray(q.codes)
+    )
+
+
+def test_exps_biased_roundtrip():
+    e = jnp.asarray([-127, -1, 0, 5, 127], jnp.int8)
+    np.testing.assert_array_equal(
+        np.asarray(mxlib.exps_from_biased(mxlib.exps_to_biased(e))), np.asarray(e)
+    )
+
+
+def test_fake_quant_ste_gradient():
+    x = jnp.asarray(np.random.default_rng(3).standard_normal((2, 32)), jnp.float32)
+    g = jax.grad(lambda t: jnp.sum(mxlib.fake_quant(t) * 3.0))(x)
+    np.testing.assert_allclose(np.asarray(g), 3.0 * np.ones_like(x), rtol=0)
+
+
+def test_fake_quant_matches_quant_dequant():
+    x = jnp.asarray(np.random.default_rng(4).standard_normal((2, 80)), jnp.float32)
+    fq = mxlib.fake_quant(x)
+    qd = mxlib.dequantize(mxlib.quantize(x), out_len=80)
+    np.testing.assert_array_equal(np.asarray(fq), np.asarray(qd))
+    assert fq.shape == x.shape
+
+
+def test_quantize_w_layout():
+    w = np.random.default_rng(5).standard_normal((64, 16)).astype(np.float32)
+    wq = mxlib.quantize_w(jnp.asarray(w))
+    assert wq.codes.shape == (64, 16) and wq.exps.shape == (2, 16)
+    deq = np.asarray(mxlib.dequantize_w(wq))
+    # block structure: scale shared along K per column
+    err = np.abs(deq - w)
+    assert err.max() < np.abs(w).max()  # sanity: quantization not garbage
+    # exactness for representable values
+    w2 = np.zeros((32, 2), np.float32)
+    w2[:, 0] = 6.0
+    w2[:, 1] = 3.0
+    np.testing.assert_array_equal(
+        np.asarray(mxlib.dequantize_w(mxlib.quantize_w(jnp.asarray(w2)))), w2
+    )
+
+
+def test_mx_dot_bf16_close_to_fp32():
+    rng = np.random.default_rng(6)
+    a = rng.standard_normal((4, 64)).astype(np.float32)
+    b = rng.standard_normal((64, 8)).astype(np.float32)
+    am, bm = mxlib.quantize(jnp.asarray(a)), mxlib.quantize_w(jnp.asarray(b))
+    ref = np.asarray(mxlib.dequantize(am, out_len=64)) @ np.asarray(
+        mxlib.dequantize_w(bm)
+    )
+    out = np.asarray(mxlib.mx_dot_bf16(am, bm), np.float32)
+    out2 = np.asarray(mxlib.mx_dot_bf16(am, bm, bf16_partials=True), np.float32)
+    np.testing.assert_allclose(out, ref, rtol=2e-2, atol=2e-2)
+    np.testing.assert_allclose(out2, ref, rtol=4e-2, atol=4e-2)
