@@ -1,0 +1,123 @@
+"""End-to-end hybrid analog/digital CIM inference (paper §4 deployment).
+
+Walks the full offline->serving flow on a tiny model:
+
+1. digital baseline: fully-digital MXFP4 accelerator sim
+   (``quant="mxfp4_digital"``: W+A quantized linears + MXFP4 SDPA),
+2. Row-Hist calibration: representative batches -> per-static-linear
+   target exponent E_N + ADC full scale, keyed by param-tree path,
+3. conversion: static linears -> resident INT5 codes + exps + calib
+   (the analog CTT arrays), MoE experts -> packed digital MXFP4,
+4. hybrid forward + greedy decode on the ``cim_analog`` backend, and the
+   digital-vs-CIM logit/accuracy deltas (the paper's <1% claim, scaled).
+
+Run:  PYTHONPATH=src python examples/hybrid_infer.py [--arch h2o-danube-1.8b]
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs as C
+from repro.core import cim as cimlib
+from repro.core.metrics import sqnr_db
+from repro.layers import backends
+from repro.layers.common import RunCtx, ShardingCtx
+from repro.models import calibrate, lm
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="h2o-danube-1.8b")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=24)
+    ap.add_argument("--tokens", type=int, default=8)
+    ap.add_argument("--adc-bits", type=int, default=10)
+    ap.add_argument("--cm-bits", type=int, default=3)
+    args = ap.parse_args()
+
+    cfg = C.tiny(C.ARCHS[args.arch])
+    params, _ = lm.init_model(jax.random.PRNGKey(0), cfg)
+    ctx = RunCtx(shd=ShardingCtx(), dense_attn_max=256)
+    cim_cfg = cimlib.CIMConfig(adc_bits=args.adc_bits, cm_bits=args.cm_bits,
+                               two_pass=True)
+
+    batches = calibrate.calibration_batches(
+        cfg, n_batches=3, batch=args.batch, seq=args.seq
+    )
+    t0 = time.time()
+    conv, calibs = calibrate.convert_model_cim(
+        params, cfg, ctx, batches, cim_cfg=cim_cfg, min_n=32
+    )
+    n_analog = len(calibs)
+    print(f"== offline: Row-Hist calibrated {n_analog} static linears "
+          f"({time.time() - t0:.1f}s) ==")
+    for path in sorted(calibs)[:6]:
+        c = calibs[path]
+        print(f"  {path:28s} E_N={int(c.e_n):3d}  ADC_FS={float(c.adc_fs):9.1f}")
+    if n_analog > 6:
+        print(f"  ... and {n_analog - 6} more")
+
+    eval_batch = batches[0]
+    float_ctx = ctx
+    dig_ctx = dataclasses.replace(ctx, quant="mxfp4_digital")
+    hyb_ctx = dataclasses.replace(ctx, quant="cim", cim=cim_cfg)
+
+    f_logits, _ = lm.forward(params, cfg, float_ctx, eval_batch)
+    d_logits, _ = lm.forward(params, cfg, dig_ctx, eval_batch)
+    h_logits, _ = lm.forward(conv, cfg, hyb_ctx, eval_batch)
+    f = np.asarray(f_logits, np.float32)
+    d = np.asarray(d_logits, np.float32)
+    h = np.asarray(h_logits, np.float32)
+
+    print("\n== logit fidelity (tiny random-init model; worst case) ==")
+    print(f"digital MXFP4 vs bf16 float : SQNR {sqnr_db(f, d):6.1f} dB, "
+          f"top-1 agree {(f.argmax(-1) == d.argmax(-1)).mean():.2%}")
+    print(f"hybrid CIM    vs bf16 float : SQNR {sqnr_db(f, h):6.1f} dB, "
+          f"top-1 agree {(f.argmax(-1) == h.argmax(-1)).mean():.2%}")
+    print(f"hybrid CIM    vs digital    : SQNR {sqnr_db(d, h):6.1f} dB, "
+          f"top-1 agree {(d.argmax(-1) == h.argmax(-1)).mean():.2%}  "
+          f"<- the paper's analog-vs-digital delta")
+
+    # lossless sanity: no ADC + unbounded mirror window == digital exactly.
+    # The converted tree is config-independent (E_N from Row-Hist, adc_fs
+    # unused when the ADC is off), so reuse the calibs — no second capture.
+    lossless = cimlib.CIMConfig(adc_bits=None, cm_bits=64, two_pass=False)
+    conv0 = backends.convert_params_cim(params, calibs, min_n=32)
+    # unrolled op-by-op execution on both sides: XLA scan fusion flips
+    # MXFP4 codes at 1-ulp boundaries between different graphs, so the
+    # bitwise identity only shows outside lax.scan
+    h0, _ = lm.forward(conv0, cfg,
+                       dataclasses.replace(hyb_ctx, cim=lossless,
+                                           unroll_layers=True), eval_batch)
+    d0, _ = lm.forward(params, cfg,
+                       dataclasses.replace(dig_ctx, unroll_layers=True),
+                       eval_batch)
+    print(f"lossless CIM  vs digital    : SQNR "
+          f"{sqnr_db(np.asarray(d0, np.float32), np.asarray(h0, np.float32)):6.1f}"
+          f" dB (exact wiring)")
+
+    print(f"\n== hybrid greedy decode ({args.tokens} tokens) ==")
+    b, s = eval_batch["ids"].shape
+    caches = lm.init_cache(cfg, b, s + args.tokens)
+    logits, caches = lm.forward(conv, cfg, hyb_ctx, eval_batch, caches=caches)
+    ids = jnp.argmax(logits[:, -1].astype(jnp.float32), -1)[:, None]
+    step = jax.jit(
+        lambda p, c, i, pos: lm.decode_step(p, cfg, hyb_ctx, i, pos, c)
+    )
+    outs, t0 = [ids], time.time()
+    for t in range(args.tokens - 1):
+        lo, caches = step(conv, caches, ids, jnp.int32(s + t))
+        ids = jnp.argmax(lo.astype(jnp.float32), -1)[:, None]
+        outs.append(ids)
+    dt = time.time() - t0
+    print(f"decoded {(args.tokens - 1) * b} tokens in {dt:.2f}s; "
+          f"ids[0] = {jnp.concatenate(outs, 1)[0].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""Shared fidelity metrics for benchmarks, examples and tests."""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def sqnr_db(ref, test) -> float:
+    """Signal-to-quantization-noise ratio in dB (f64 accumulation)."""
+    ref = np.asarray(ref, np.float64)
+    err = np.asarray(test, np.float64) - ref
+    return float(
+        10 * np.log10((ref**2).mean() / max((err**2).mean(), 1e-30))
+    )

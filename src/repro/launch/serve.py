@@ -1,9 +1,15 @@
-"""Serving launcher: MXFP4 weight-only resident weights (the FWS mode),
-prefill + batched greedy decode.
+"""Serving launcher: pluggable linear-execution backends.
+
+``--backend mxfp4`` (default): packed MXFP4 weight-only resident weights
+(the digital FWS mode). ``--backend cim``: offline Row-Hist calibration +
+conversion to resident analog CTT arrays, then an end-to-end *hybrid*
+analog/digital decode — static linears on the ``cim_analog`` backend,
+SDPA on the digital MXFP4 systolic path. ``--backend float``: bf16.
 
 Local smoke:
   PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --tiny \
       --tokens 16
+  PYTHONPATH=src python -m repro.launch.serve --tiny --backend cim
 """
 
 from __future__ import annotations
@@ -15,9 +21,41 @@ import jax
 import jax.numpy as jnp
 
 from repro import configs as C
+from repro.core import cim as cimlib
 from repro.layers.common import RunCtx, ShardingCtx, convert_params_mxfp4
-from repro.launch.steps import _head_logits
-from repro.models import lm
+from repro.models import calibrate, lm
+
+
+def build_backend(args, cfg, params):
+    """Returns (converted_params, RunCtx) for the requested backend."""
+    shd = ShardingCtx()
+    kw = dict(shd=shd, dense_attn_max=256, impl=args.impl,
+              interpret=args.interpret)
+    if args.backend == "float":
+        return params, RunCtx(**kw)
+    if args.backend == "mxfp4":
+        return (
+            convert_params_mxfp4(params),
+            RunCtx(quant="mxfp4_wonly", **kw),
+        )
+    if args.backend == "cim":
+        cim_cfg = cimlib.CIMConfig(
+            adc_bits=args.adc_bits, cm_bits=args.cm_bits, two_pass=True
+        )
+        base_ctx = RunCtx(shd=shd, dense_attn_max=256)
+        batches = calibrate.calibration_batches(
+            cfg, n_batches=args.calib_batches, batch=args.batch,
+            seq=args.prompt_len,
+        )
+        t0 = time.time()
+        conv, calibs = calibrate.convert_model_cim(
+            params, cfg, base_ctx, batches,
+            cim_cfg=cim_cfg, min_n=args.cim_min_n,
+        )
+        print(f"row-hist calibration: {len(calibs)} static linears -> "
+              f"analog arrays in {time.time() - t0:.1f}s")
+        return conv, RunCtx(quant="cim", cim=cim_cfg, **kw)
+    raise SystemExit(f"unknown --backend {args.backend!r}")
 
 
 def main():
@@ -27,14 +65,25 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--backend", default="mxfp4",
+                    choices=("float", "mxfp4", "cim"))
+    ap.add_argument("--calib-batches", type=int, default=2)
+    ap.add_argument("--cim-min-n", type=int, default=32)
+    ap.add_argument("--adc-bits", type=int, default=10)
+    ap.add_argument("--cm-bits", type=int, default=3)
+    ap.add_argument("--impl", default="jnp", choices=("jnp", "pallas"),
+                    help="pure-jnp reference or Pallas kernels")
+    ap.add_argument("--no-interpret", dest="interpret", action="store_false",
+                    default=True,
+                    help="compile Pallas kernels instead of interpreting "
+                         "(real TPU runs; requires --impl pallas)")
     args = ap.parse_args()
 
     cfg = C.tiny(C.ARCHS[args.arch]) if args.tiny else C.ARCHS[args.arch]
     if not cfg.supports_decode:
         raise SystemExit(f"{cfg.name} is encoder-only; no decode")
     params, _ = lm.init_model(jax.random.PRNGKey(0), cfg)
-    params = convert_params_mxfp4(params)
-    ctx = RunCtx(shd=ShardingCtx(), quant="mxfp4_wonly", dense_attn_max=256)
+    params, ctx = build_backend(args, cfg, params)
 
     max_len = args.prompt_len + args.tokens
     caches = lm.init_cache(cfg, args.batch, max_len)
@@ -42,12 +91,14 @@ def main():
         jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0,
         cfg.vocab_size,
     )
+    # head over the last position only (a [B, S, V] logits tensor is
+    # wasteful at real vocab sizes), still through the active backend
+    # (analog read-out under --backend cim)
     hidden, caches = lm.forward(
         params, cfg, ctx, {"ids": prompt}, caches=caches, return_hidden=True
     )
-    ids = jnp.argmax(
-        _head_logits(cfg, params, hidden[:, -1]).astype(jnp.float32), -1
-    )[:, None]
+    logits = lm._head(ctx, cfg, params, hidden[:, -1:])
+    ids = jnp.argmax(logits[:, -1].astype(jnp.float32), -1)[:, None]
 
     step = jax.jit(lambda p, c, i, pos: lm.decode_step(p, cfg, ctx, i, pos, c))
     t0, outs = time.time(), [ids]
@@ -57,7 +108,8 @@ def main():
         ids = jnp.argmax(logits.astype(jnp.float32), -1)[:, None]
         outs.append(ids)
     dt = time.time() - t0
-    print(f"{cfg.name}: decoded {(args.tokens - 1) * args.batch} tokens "
+    print(f"{cfg.name} [{args.backend}]: decoded "
+          f"{(args.tokens - 1) * args.batch} tokens "
           f"in {dt:.2f}s; ids[0] = "
           f"{jnp.concatenate(outs, 1)[0].tolist()}")
 

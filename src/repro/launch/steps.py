@@ -196,6 +196,14 @@ def _head_logits(cfg, params, last_hidden):
             last_hidden, params["embed"]["emb"].astype(jnp.bfloat16).T
         )
     hp = params["lm_head"]
+    if "e_n" in hp:
+        # cim_analog-converted head: the analog read-out needs a RunCtx;
+        # a silent digital dequant here would mask ADC/alignment error
+        raise ValueError(
+            "lm_head is cim_analog-converted; compute logits through "
+            "models.lm.forward / linear_apply (backend-dispatched), not "
+            "_head_logits"
+        )
     if "codes" in hp:
         return jnp.matmul(
             last_hidden.astype(jnp.bfloat16),

@@ -15,6 +15,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core import mx as mxlib
 from repro.layers import rope as ropelib
 from repro.layers.common import (
     RunCtx,
@@ -87,24 +88,84 @@ def _mask(q_pos, k_pos, causal: bool, window: int):
     return m
 
 
-def _dense_attn(q, k, v, q_pos, k_pos, cfg: AttnStatic, extra_mask=None):
-    """q [B,Sq,Hkv,G,Dh]; k,v [B,Sk,Hkv,Dh]."""
+# Digital MXFP4 systolic SDPA quantization (paper §4.4-4.5), shared by the
+# dense, flash and decode paths so the hybrid numerics stay in one place.
+
+def _mx_qk(q, k):
+    """Quantize Q/K along the head_dim contraction (last axis)."""
+    return (
+        mxlib.fake_quant(q.astype(jnp.float32)),
+        mxlib.fake_quant(k.astype(jnp.float32)),
+    )
+
+
+def _mx_score_round(s):
+    """BF16 systolic accumulator round of the QK^T scores."""
+    return s.astype(jnp.bfloat16).astype(jnp.float32)
+
+
+def _mx_pv(p, v):
+    """Re-quantize P (last axis) and V (key axis 1) before the SV array.
+    Returns (p_q, v_q, den): outputs must be divided by ``den`` — the sum
+    of the *quantized* probabilities, i.e. the hardware normalizer block
+    (same deferred-division semantics as ``core/digital.mx_attention`` and
+    the flash path), so quantizing P introduces no systematic row scale."""
+    p = mxlib.fake_quant(p)
+    den = jnp.sum(p, axis=-1, keepdims=True)
+    den = jnp.where(den == 0.0, 1.0, den)
+    return p, mxlib.fake_quant_axis(v.astype(jnp.float32), 1), den
+
+
+def _dense_attn(
+    q, k, v, q_pos, k_pos, cfg: AttnStatic, extra_mask=None,
+    mx_digital: bool = False,
+):
+    """q [B,Sq,Hkv,G,Dh]; k,v [B,Sk,Hkv,Dh].
+
+    With ``mx_digital`` the SDPA runs on the paper's digital MXFP4
+    systolic datapath (core/digital.py numerics): Q/K quantized along the
+    head_dim contraction, BF16 score accumulation, P/V re-quantized along
+    the key contraction before the SV array. This is the hybrid backend's
+    dynamic stage — weights live in the analog array, SDPA stays digital.
+    """
+    if mx_digital:
+        q, k = _mx_qk(q, k)
     s = jnp.einsum(
         "bqhgd,bkhd->bhgqk", q, k, preferred_element_type=jnp.float32
     ) * cfg.scale
+    if mx_digital:
+        s = _mx_score_round(s)
     m = _mask(q_pos, k_pos, cfg.causal, cfg.window)[:, None, None]
     if extra_mask is not None:
         m &= extra_mask[:, None, None]
     s = jnp.where(m, s, -jnp.inf)
     p = jax.nn.softmax(s, axis=-1)
     p = jnp.where(jnp.isfinite(s).any(-1, keepdims=True), p, 0.0)
+    if mx_digital:
+        p, v, den = _mx_pv(p, v)
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", p / den, v)
+        return o.astype(jnp.bfloat16)
     return jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v)
 
 
-def _flash_attn(q, k, v, q_pos, k_pos, cfg: AttnStatic, ctx: RunCtx):
+def _flash_attn(q, k, v, q_pos, k_pos, cfg: AttnStatic, ctx: RunCtx,
+                mx_digital: bool = False):
     """Online-softmax attention, chunked over Q (lax.map) and KV (scan).
     Compiles to compact HLO and bounds live score memory to
-    [B, qc, Hkv, G, kc]. Same tiling scheme as the Pallas kernel."""
+    [B, qc, Hkv, G, kc]. Same tiling scheme as the Pallas kernel.
+
+    With ``mx_digital`` (hybrid / fully-digital MXFP4 eval) Q/K are
+    quantized along the head_dim contraction, scores get the BF16 systolic
+    round, and P/V are re-quantized per KV tile along the key contraction —
+    the same per-tile treatment as ``core/digital.mx_attention``, so the
+    digital-SDPA semantics do not depend on which attention path the
+    sequence length selects. Note the quantization *granularity* differs
+    from the dense path (per KV tile vs whole key axis), so dense and
+    flash are statistically — not bitwise — equivalent, mirroring the
+    tiled systolic hardware."""
+    if mx_digital:
+        qq, kq = _mx_qk(q, k)
+        q, k = qq.astype(q.dtype), kq.astype(k.dtype)
     b, sq, hkv, g, dh = q.shape
     sk = k.shape[1]
     kc = min(ctx.attn_chunk, sk)
@@ -134,6 +195,8 @@ def _flash_attn(q, k, v, q_pos, k_pos, cfg: AttnStatic, ctx: RunCtx):
                 "bqhgd,bkhd->bqhgk", qi, kci,
                 preferred_element_type=jnp.float32,
             ) * cfg.scale
+            if mx_digital:
+                s = _mx_score_round(s)
             msk = _mask(qpi, kpi, cfg.causal, cfg.window)  # [B, qc, kc]
             s = jnp.where(msk[:, :, None, None, :], s, -jnp.inf)
             m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
@@ -143,6 +206,10 @@ def _flash_attn(q, k, v, q_pos, k_pos, cfg: AttnStatic, ctx: RunCtx):
             corr = jnp.where(
                 jnp.isfinite(m_run), jnp.exp(m_run - m_safe), 0.0
             )
+            if mx_digital:  # per-tile P/V re-quant; den accumulates the
+                # quantized-P sums, so the final division normalizes
+                p, vq, _ = _mx_pv(p, vci)
+                vci = vq.astype(vci.dtype)
             pv = jnp.einsum("bqhgk,bkhd->bqhgd", p.astype(vci.dtype), vci)
             acc = acc * corr[..., None].astype(acc.dtype) + pv.astype(jnp.float32)
             den = den * corr + jnp.sum(p, axis=-1)
@@ -169,9 +236,9 @@ def _flash_attn(q, k, v, q_pos, k_pos, cfg: AttnStatic, ctx: RunCtx):
 def _qkv(ctx: RunCtx, cfg: AttnStatic, p: dict, x: jax.Array, positions):
     b, s, _ = x.shape
     h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
-    q = linear_apply(ctx, p["wq"], x).reshape(b, s, h, hd)
-    k = linear_apply(ctx, p["wk"], x).reshape(b, s, kv, hd)
-    v = linear_apply(ctx, p["wv"], x).reshape(b, s, kv, hd)
+    q = linear_apply(ctx, p["wq"], x, name="wq").reshape(b, s, h, hd)
+    k = linear_apply(ctx, p["wk"], x, name="wk").reshape(b, s, kv, hd)
+    v = linear_apply(ctx, p["wv"], x, name="wv").reshape(b, s, kv, hd)
     if cfg.qk_norm:
         q = rmsnorm_apply(p["qn"], q)
         k = rmsnorm_apply(p["kn"], k)
@@ -206,6 +273,7 @@ def attn_apply(
     b, s, d = x.shape
     h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
     g = h // kv
+    mx_dig = ctx.hybrid_digital_sdpa
     xn = norm_apply(cfg.norm, p["ln"], x)
     q, k, v = _qkv(ctx, cfg, p, xn, positions)
     q = ctx.act(q.reshape(b, s, kv, g, hd), "batch", "seq", "kv_heads", "heads_g", "head_dim")
@@ -228,9 +296,11 @@ def attn_apply(
         k = ctx.act(k, "batch", "kv_seq", "kv_heads", "head_dim")
         v = ctx.act(v, "batch", "kv_seq", "kv_heads", "head_dim")
         if s <= ctx.dense_attn_max:
-            o = _dense_attn(q, k, v, positions, positions, cfg)
+            o = _dense_attn(q, k, v, positions, positions, cfg,
+                            mx_digital=mx_dig)
         else:
-            o = _flash_attn(q, k, v, positions, positions, cfg, ctx)
+            o = _flash_attn(q, k, v, positions, positions, cfg, ctx,
+                            mx_digital=mx_dig)
     elif cache is not None:
         w = cache["k"].shape[1]
         slot = pos % w
@@ -239,23 +309,34 @@ def attn_apply(
         new_cache = {"k": ck, "v": cv}
         idx = jnp.arange(w)
         valid = (idx <= pos) | (pos >= w)
+        qd, kd = q, ck
+        if mx_dig:  # digital MXFP4 systolic SDPA for the hybrid backend
+            qd, kd = _mx_qk(q, ck)
         sc = jnp.einsum(
-            "bqhgd,bkhd->bhgqk", q, ck, preferred_element_type=jnp.float32
+            "bqhgd,bkhd->bhgqk", qd, kd, preferred_element_type=jnp.float32
         ) * cfg.scale
+        if mx_dig:
+            sc = _mx_score_round(sc)
         sc = jnp.where(valid[None, None, None, None, :], sc, -jnp.inf)
-        pr = jax.nn.softmax(sc, axis=-1).astype(cv.dtype)
-        o = jnp.einsum("bhgqk,bkhd->bqhgd", pr, cv)
+        if mx_dig:
+            pr, vd, den = _mx_pv(jax.nn.softmax(sc, axis=-1), cv)
+            o = jnp.einsum("bhgqk,bkhd->bqhgd", pr / den, vd).astype(cv.dtype)
+        else:
+            pr = jax.nn.softmax(sc, axis=-1).astype(cv.dtype)
+            o = jnp.einsum("bhgqk,bkhd->bqhgd", pr, cv)
     else:
         new_cache = None
         k = ctx.act(k, "batch", "kv_seq", "kv_heads", "head_dim")
         v = ctx.act(v, "batch", "kv_seq", "kv_heads", "head_dim")
         if s <= ctx.dense_attn_max:
-            o = _dense_attn(q, k, v, positions, positions, cfg)
+            o = _dense_attn(q, k, v, positions, positions, cfg,
+                            mx_digital=mx_dig)
         else:
-            o = _flash_attn(q, k, v, positions, positions, cfg, ctx)
+            o = _flash_attn(q, k, v, positions, positions, cfg, ctx,
+                            mx_digital=mx_dig)
 
     o = o.reshape(b, s, h * hd)
-    y = linear_apply(ctx, p["wo"], o)
+    y = linear_apply(ctx, p["wo"], o, name="wo")
     y = ctx.act(y, "batch", "seq", "embed")
     return x + y.astype(x.dtype), new_cache
 

@@ -16,6 +16,19 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import mx as mxlib
+from repro.layers import backends as backends_lib
+from repro.layers.backends import (  # noqa: F401  (re-exported API)
+    ActivationTap,
+    _dequant_packed,
+    _quantize_packed,
+    backend_names,
+    calibrate_taps,
+    convert_params_cim,
+    get_backend,
+    quantize_linear_params,
+    register_backend,
+    resolve_backend,
+)
 
 
 # --------------------------------------------------------------- sharding
@@ -88,19 +101,53 @@ class ShardingCtx:
 
 @dataclasses.dataclass(frozen=True)
 class RunCtx:
-    """Per-call context threaded through model apply functions."""
+    """Per-call context threaded through model apply functions.
+
+    ``quant`` names a linear-execution backend from
+    ``repro.layers.backends`` (aliases: ``none -> float_bf16``,
+    ``cim -> cim_analog``); unknown names raise ``ValueError`` at the first
+    linear. ``impl`` selects the pure-jnp reference or the Pallas kernels;
+    ``interpret`` is threaded into every ``pallas_call`` (True = CPU
+    interpreter, False = compiled TPU lowering).
+    """
 
     shd: ShardingCtx
-    quant: str = "none"  # none | mxfp4_ste | mxfp4_wonly | cim
+    quant: str = "none"  # backend name: none|mxfp4_ste|mxfp4_ste_prequant|mxfp4_wonly|cim
     impl: str = "jnp"  # jnp | pallas
+    interpret: bool = True  # Pallas interpret mode (False on real TPUs)
     decode: bool = False
     attn_chunk: int = 1024  # KV chunk for the online-softmax path
     q_chunk: int = 2048
     dense_attn_max: int = 2048  # below this seq len use the dense path
     unroll_scans: bool = False  # blockwise cost analysis: count loop trips
+    cim: Any = None  # CIMConfig override for the cim_analog backend
+    tap: Any = None  # ActivationTap during eager calibration capture
+    scope: str = ""  # param-tree path prefix while a tap is active
+    # Unroll scanned layer stacks into a Python loop. XLA fuses the whole
+    # scan body into one computation, and 1-ulp fusion differences in
+    # log2/div flip MXFP4 codes at rounding boundaries — so cross-graph
+    # numerics-identity checks (analog vs digital) are only bitwise under
+    # unrolled op-by-op execution. Implied by an active tap.
+    unroll_layers: bool = False
 
     def act(self, x, *axes):
         return self.shd.act(x, *axes)
+
+    def scoped(self, name: str) -> "RunCtx":
+        """Extend the capture scope. No-op (returns self) unless an
+        ActivationTap is active, so traced paths never pay for it."""
+        if self.tap is None:
+            return self
+        return dataclasses.replace(
+            self, scope=f"{self.scope}/{name}" if self.scope else name
+        )
+
+    @property
+    def hybrid_digital_sdpa(self) -> bool:
+        """Under the hybrid analog backend (and the fully-digital MXFP4
+        eval mode), SDPA runs on the digital MXFP4 systolic path (paper
+        §4.4-4.5); QKV/O stay analog for ``cim``."""
+        return self.quant in ("cim", "cim_analog", "mxfp4_digital")
 
 
 # ----------------------------------------------------------------- linear
@@ -125,77 +172,25 @@ def linear_init(
     return params, specs
 
 
-def linear_apply(ctx: RunCtx, params: dict, x: jax.Array) -> jax.Array:
-    """Quantization-mode-dispatched linear. x: [..., K] (bf16)."""
-    if "codes" in params:  # serving-converted MXFP4 weight-only params
-        if ctx.impl == "pallas":
-            from repro.kernels.mxfp4_matmul import ops as mmops
+def linear_apply(
+    ctx: RunCtx, params: dict, x: jax.Array, name: str | None = None
+) -> jax.Array:
+    """Backend-dispatched linear. x: [..., K] (bf16).
 
-            y = mmops.mxfp4_matmul(
-                x, params["codes"], params["exps"], interpret=True
-            )
-        else:
-            w = _dequant_packed(params["codes"], params["exps"])
-            y = jnp.matmul(x.astype(jnp.bfloat16), w)
-    else:
-        w = params["w"].astype(jnp.bfloat16)
-        if ctx.quant == "mxfp4_ste":
-            wq = mxlib.fake_quant_axis(params["w"], axis=0)
-            xq = mxlib.fake_quant(x.astype(jnp.float32))
-            y = jnp.matmul(
-                xq.astype(jnp.bfloat16), wq.astype(jnp.bfloat16)
-            )
-        elif ctx.quant == "mxfp4_ste_prequant":
-            # weights were fake-quantized once at the step boundary
-            # (exact: weights are constant within a step) — gathers move
-            # bf16 instead of f32 and the quant ops run once, not k_micro
-            # times
-            xq = mxlib.fake_quant(x.astype(jnp.float32))
-            y = jnp.matmul(xq.astype(jnp.bfloat16), w)
-        else:
-            y = jnp.matmul(x.astype(jnp.bfloat16), w)
+    Execution is resolved by ``repro.layers.backends``: converted-param
+    markers (packed MXFP4 codes, resident CIM codes + calib) win, otherwise
+    ``ctx.quant`` names the backend; unknown names raise ``ValueError``.
+    ``name`` is the call-site's local param key ("wq", "w1", ...) — with an
+    active ``ActivationTap`` it extends ``ctx.scope`` into the full
+    param-tree path used to key Row-Hist calibration.
+    """
+    if ctx.tap is not None and name is not None:
+        path = f"{ctx.scope}/{name}" if ctx.scope else name
+        ctx.tap.record(path, params, x)
+    y = backends_lib.resolve_backend(ctx, params).forward(ctx, params, x)
     if "b" in params:
         y = y + params["b"].astype(y.dtype)
     return y
-
-
-def _dequant_packed(codes: jax.Array, exps: jax.Array) -> jax.Array:
-    """packed uint8 codes [K//2, N] + biased exps [K//32, N] -> bf16 [K, N].
-
-    All-bf16 arithmetic: codes/2 and 2^e are exactly representable in
-    bf16, so this is bit-identical to the f32 path while cutting the
-    dequant intermediate traffic ~3x (decode is weight-read bound —
-    EXPERIMENTS.md §Perf; the Pallas kernel removes even this by
-    expanding inside VMEM)."""
-    kp2, n = codes.shape[-2], codes.shape[-1]
-    k = kp2 * 2
-    c = jnp.swapaxes(mxlib.unpack_codes(jnp.swapaxes(codes, -1, -2)), -1, -2)
-    scale = mxlib.exp2i(mxlib.exps_from_biased(exps) - 1).astype(
-        jnp.bfloat16
-    )  # 2^(e-1) == 0.5 * 2^e, exact
-    cb = c.reshape(c.shape[:-2] + (k // 32, 32, n)).astype(jnp.bfloat16)
-    w = cb * scale[..., :, None, :]
-    return w.reshape(c.shape[:-2] + (k, n))
-
-
-def _quantize_packed(w: jax.Array) -> dict:
-    """[..., K, N] float -> packed MXFP4 {codes [..., K//2, N] uint8,
-    exps [..., K//32, N] uint8} quantized along K."""
-    mxq = mxlib.quantize(jnp.swapaxes(w, -1, -2))
-    codes = jnp.swapaxes(mxq.codes, -1, -2)
-    packed = jnp.swapaxes(
-        mxlib.pack_codes(jnp.swapaxes(codes, -1, -2)), -1, -2
-    )
-    exps = mxlib.exps_to_biased(jnp.swapaxes(mxq.exps, -1, -2))
-    return {"codes": packed, "exps": exps}
-
-
-def quantize_linear_params(params: dict) -> dict:
-    """Convert a float linear param dict to packed MXFP4 (weight-only)."""
-    out = _quantize_packed(params["w"])
-    if "b" in params:
-        out["b"] = params["b"]
-    return out
 
 
 def is_linear_params(p) -> bool:

@@ -39,10 +39,10 @@ def ffn_init(key, d: int, d_ff: int, kind: str, norm: str, use_bias: bool = Fals
 def ffn_apply(ctx: RunCtx, kind: str, norm: str, p: dict, x: jax.Array) -> jax.Array:
     """Pre-norm FFN sublayer with residual."""
     xn = norm_apply(norm, p["ln"], x)
-    h = _act(kind, linear_apply(ctx, p["w1"], xn))
+    h = _act(kind, linear_apply(ctx, p["w1"], xn, name="w1"))
     if kind in GLU_KINDS:
-        h = h * linear_apply(ctx, p["w3"], xn)
+        h = h * linear_apply(ctx, p["w3"], xn, name="w3")
     h = ctx.act(h, "batch", "seq", "mlp")
-    y = linear_apply(ctx, p["w2"], h)
+    y = linear_apply(ctx, p["w2"], h, name="w2")
     y = ctx.act(y, "batch", "seq", "embed")
     return x + y.astype(x.dtype)

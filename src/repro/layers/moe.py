@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import mx as mxlib
+from repro.layers import backends
 from repro.layers.common import RunCtx, linear_init, norm_init, norm_apply
 from repro.layers.ffn import GLU_KINDS, _act
 
@@ -47,15 +48,10 @@ def moe_init(
 
 
 def _expert_w(ctx: RunCtx, p: dict, name: str) -> jax.Array:
-    w = p[name]
-    if isinstance(w, dict):  # serving-converted packed MXFP4
-        from repro.layers.common import _dequant_packed
-
-        return jax.vmap(lambda c, e: _dequant_packed(c, e))(w["codes"], w["exps"])
-    if ctx.quant == "mxfp4_ste":
-        w = mxlib.fake_quant_axis(w, axis=1)
-    # "mxfp4_ste_prequant": already quantized at the step boundary
-    return w.astype(jnp.bfloat16)
+    """Expert weights execute on the digital path under every backend
+    (dynamic dispatch — paper's hybrid partition); the registry validates
+    ``ctx.quant`` so unknown backend names raise."""
+    return backends.expert_weight(ctx, p[name])
 
 
 def _n_groups(ctx: RunCtx, t: int) -> int:

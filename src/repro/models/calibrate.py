@@ -1,0 +1,101 @@
+"""Model-wide Row-Hist calibration + hybrid analog/digital conversion.
+
+The paper's deployment flow (§3.2.1, §4.3): run a handful of
+representative batches through the model *offline*, record the input
+activations of every static linear, pick each layer's target exponent
+``E_N`` from the observed block-output-exponent distribution (zero
+overflow => max), calibrate the ADC full scale at that ``E_N``, then burn
+the MXFP4 weights into the CTT arrays as resident INT5 codes. At serving
+time those layers execute on the analog ``cim_analog`` backend while
+dynamic compute (SDPA, MoE dispatch) stays on the digital MXFP4 path.
+
+The capture run executes *eagerly* with scanned segments unrolled (see
+``lm._run_segment``) so per-layer activations record under their
+param-tree paths; conversion re-keys stacked segments so ``lax.scan``
+slices per-layer calibration exactly like the weights.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.core import cim as cimlib
+from repro.layers import backends
+from repro.layers.common import RunCtx
+from repro.models import lm
+
+
+def capture_rowhist_calibration(
+    params,
+    cfg,
+    ctx: RunCtx,
+    batches,
+    *,
+    cim_cfg: cimlib.CIMConfig | None = None,
+    min_n: int = 256,
+    max_rows: int = 512,
+    calib_quant: str = "mxfp4_digital",
+    wq_cache: dict | None = None,
+) -> dict[str, cimlib.LayerCalib]:
+    """Run ``batches`` (list of model-input dicts) through the model with
+    an ActivationTap and return ``{param-tree path: LayerCalib}`` for every
+    static analog-eligible linear. Runs eagerly — do not call under jit.
+
+    The capture executes on the *digital MXFP4* path by default
+    (``calib_quant="mxfp4_digital"``), not bf16 float: at serving time each
+    analog layer sees activations produced by quantized upstream layers, so
+    calibrating on the matched distribution keeps the Row-Hist max-exponent
+    guarantee (zero overflow) valid at deployment. With a lossless CIM
+    config this makes the hybrid model *exactly* the digital MXFP4 model.
+    """
+    tap = backends.ActivationTap(min_n=min_n, max_rows=max_rows)
+    cap_ctx = dataclasses.replace(ctx, quant=calib_quant, tap=tap, scope="")
+    for batch in batches:
+        lm.forward(params, cfg, cap_ctx, batch)
+    return backends.calibrate_taps(
+        tap, cim_cfg or cimlib.CIMConfig(), wq_cache=wq_cache
+    )
+
+
+def convert_model_cim(
+    params,
+    cfg,
+    ctx: RunCtx,
+    batches,
+    *,
+    cim_cfg: cimlib.CIMConfig | None = None,
+    min_n: int = 256,
+    max_rows: int = 512,
+):
+    """Full offline pipeline: capture -> Row-Hist calibrate -> convert.
+
+    Returns ``(converted_params, calibs)``. The converted tree holds
+    resident INT5 codes + exponents + per-layer calib for the analog
+    layers, packed MXFP4 for MoE expert banks, bf16 for everything else.
+    Serve with ``RunCtx(quant="cim", cim=cim_cfg)``.
+    """
+    cim_cfg = cim_cfg or cimlib.CIMConfig()
+    wq_cache: dict = {}  # quantize each analog weight once, not twice
+    calibs = capture_rowhist_calibration(
+        params, cfg, ctx, batches,
+        cim_cfg=cim_cfg, min_n=min_n, max_rows=max_rows, wq_cache=wq_cache,
+    )
+    converted = backends.convert_params_cim(
+        params, calibs, min_n=min_n, wq_cache=wq_cache
+    )
+    return converted, calibs
+
+
+def calibration_batches(cfg, n_batches: int = 4, batch: int = 4,
+                        seq: int = 32, seed: int = 1234):
+    """Synthetic representative batches (random token ids) for smoke-scale
+    calibration when no dataset is wired in."""
+    out = []
+    for i in range(n_batches):
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), i)
+        out.append({
+            "ids": jax.random.randint(key, (batch, seq), 0, cfg.vocab_size)
+        })
+    return out

@@ -310,15 +310,16 @@ def cache_specs(cfg: ArchConfig):
 
 def _block_apply(ctx, cfg, seg: Segment, p, x, positions, cache, pos, shared, x0):
     if seg.kind in ("attn", "moe_attn"):
-        x, nc = attn_mod.attn_apply(ctx, seg.attn, p["attn"], x, positions,
-                                    cache, pos)
+        x, nc = attn_mod.attn_apply(ctx.scoped("attn"), seg.attn, p["attn"],
+                                    x, positions, cache, pos)
         if seg.kind == "moe_attn":
             x = moe_mod.moe_apply(
-                ctx, cfg.ffn_kind, cfg.norm, p["moe"], x, cfg.top_k,
-                cfg.capacity_factor,
+                ctx.scoped("moe"), cfg.ffn_kind, cfg.norm, p["moe"], x,
+                cfg.top_k, cfg.capacity_factor,
             )
         else:
-            x = ffn_mod.ffn_apply(ctx, cfg.ffn_kind, cfg.norm, p["ffn"], x)
+            x = ffn_mod.ffn_apply(ctx.scoped("ffn"), cfg.ffn_kind, cfg.norm,
+                                  p["ffn"], x)
         return x, nc
     if seg.kind == "mamba":
         return ssm_mod.mamba_apply(ctx, seg.mamba, p, x, cache)
@@ -327,12 +328,20 @@ def _block_apply(ctx, cfg, seg: Segment, p, x, positions, cache, pos, shared, x0
     if seg.kind == "slstm":
         return xl_mod.slstm_apply(ctx, seg.xl, p, x, cache)
     if seg.kind == "zshared":
-        h = linear_apply(ctx, shared["w_in"],
-                         jnp.concatenate([x, x0], axis=-1))
-        h, nc = attn_mod.attn_apply(ctx, seg.attn, shared["attn"], h,
-                                    positions, cache, pos)
-        h = ffn_mod.ffn_apply(ctx, cfg.ffn_kind, cfg.norm, shared["ffn"], h)
-        return x + linear_apply(ctx, shared["w_out"], h).astype(x.dtype), nc
+        # shared-block params live under the top-level "shared" tree path,
+        # so the capture scope resets (not appends) — every zshared call
+        # taps the same resident weights, as in the physical array
+        sctx = ctx if ctx.tap is None else dataclasses.replace(
+            ctx, scope="shared"
+        )
+        h = linear_apply(sctx, shared["w_in"],
+                         jnp.concatenate([x, x0], axis=-1), name="w_in")
+        h, nc = attn_mod.attn_apply(sctx.scoped("attn"), seg.attn,
+                                    shared["attn"], h, positions, cache, pos)
+        h = ffn_mod.ffn_apply(sctx.scoped("ffn"), cfg.ffn_kind, cfg.norm,
+                              shared["ffn"], h)
+        return x + linear_apply(sctx, shared["w_out"], h,
+                                name="w_out").astype(x.dtype), nc
     raise ValueError(seg.kind)
 
 
@@ -340,6 +349,22 @@ def _run_segment(ctx, cfg, seg: Segment, p, x, positions, cache, pos, shared, x0
     if seg.n == 1 or seg.kind == "zshared":
         return _block_apply(ctx, cfg, seg, p, x, positions, cache, pos,
                             shared, x0)
+
+    if ctx.tap is not None or ctx.unroll_layers:
+        # calibration capture (each per-layer activation records under its
+        # own "L<j>" scope; scan would trace the tap callbacks away) or
+        # explicit unrolled execution for bitwise numerics comparisons
+        ncs = []
+        for j in range(seg.n):
+            pj = jax.tree.map(lambda a: a[j], p)
+            cj = None if cache is None else jax.tree.map(lambda a: a[j], cache)
+            x, nc = _block_apply(ctx.scoped(f"L{j}"), cfg, seg, pj, x,
+                                 positions, cj, pos, shared, x0)
+            ncs.append(nc)
+        nc = None if cache is None else jax.tree.map(
+            lambda *xs: jnp.stack(xs), *ncs
+        )
+        return x, nc
 
     def body(carry, xs):
         if cache is None:
@@ -359,7 +384,8 @@ def _run_segment(ctx, cfg, seg: Segment, p, x, positions, cache, pos, shared, x0
 
 def embed_inputs(ctx: RunCtx, cfg: ArchConfig, params, batch):
     if cfg.frontend == "audio":
-        x = linear_apply(ctx, params["front_proj"], batch["emb"])
+        x = linear_apply(ctx, params["front_proj"], batch["emb"],
+                         name="front_proj")
         s = x.shape[1]
         # sinusoidal positions (frontend stub; HuBERT's conv-pos simplified)
         pos = jnp.arange(s)
@@ -372,7 +398,8 @@ def embed_inputs(ctx: RunCtx, cfg: ArchConfig, params, batch):
     x = jnp.take(params["embed"]["emb"].astype(jnp.bfloat16), batch["ids"],
                  axis=0)
     if cfg.frontend == "vision" and "vis_emb" in batch:
-        v = linear_apply(ctx, params["front_proj"], batch["vis_emb"])
+        v = linear_apply(ctx, params["front_proj"], batch["vis_emb"],
+                         name="front_proj")
         nv = v.shape[1]
         x = jnp.concatenate([v.astype(x.dtype), x[:, nv:]], axis=1)
     return x
@@ -404,8 +431,8 @@ def forward(
     for i, seg in enumerate(segments):
         c = caches[i] if caches is not None else None
         x, nc = _run_segment(
-            ctx, cfg, seg, params["segments"][i], x, positions, c, pos,
-            params.get("shared"), x0,
+            ctx.scoped(f"segments/{i}"), cfg, seg, params["segments"][i], x,
+            positions, c, pos, params.get("shared"), x0,
         )
         new_caches.append(nc)
     x = norm_apply(cfg.norm, params["final_ln"], x)
@@ -420,7 +447,7 @@ def _head(ctx, cfg, params, x):
         w = params["embed"]["emb"].astype(jnp.bfloat16).T
         logits = jnp.matmul(x, w)
     else:
-        logits = linear_apply(ctx, params["lm_head"], x)
+        logits = linear_apply(ctx, params["lm_head"], x, name="lm_head")
     return ctx.act(logits, "batch", "seq", "vocab")
 
 

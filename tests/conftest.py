@@ -1,0 +1,75 @@
+"""Test-session setup.
+
+Provides a deterministic fallback for ``hypothesis`` when it is not
+installed (e.g. a minimal CPU container): the property tests in
+``test_mx.py`` / ``test_cim.py`` / ``test_digital.py`` only use
+``@given``/``@settings`` with ``st.integers`` and ``st.sampled_from``, so a
+tiny seeded sampler preserves their semantics (N pseudo-random examples per
+test) without the dependency. With real hypothesis installed (see
+``pyproject.toml`` extras; CI installs it) the fallback is inert.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    _FALLBACK_MAX_EXAMPLES = 10  # cap: fallback trades coverage for runtime
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+    def _integers(lo: int, hi: int) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(lo, hi))
+
+    def _sampled_from(xs) -> _Strategy:
+        xs = list(xs)
+        return _Strategy(lambda rng: xs[rng.randrange(len(xs))])
+
+    def _given(*strats: _Strategy):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = min(
+                    getattr(wrapper, "_max_examples", _FALLBACK_MAX_EXAMPLES),
+                    _FALLBACK_MAX_EXAMPLES,
+                )
+                rng = random.Random(0xC1A0)
+                for _ in range(n):
+                    fn(*args, *[s._draw(rng) for s in strats], **kwargs)
+
+            wrapper.hypothesis_fallback = True
+            # hide the drawn parameters from pytest's fixture resolution
+            # (real hypothesis does the same)
+            wrapper.__signature__ = inspect.Signature()
+            del wrapper.__wrapped__
+            return wrapper
+
+        return deco
+
+    def _settings(max_examples: int = 20, deadline=None, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.integers = _integers
+    _st.sampled_from = _sampled_from
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _given
+    _hyp.settings = _settings
+    _hyp.strategies = _st
+    _hyp.__is_fallback_stub__ = True
+
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st
