@@ -29,6 +29,9 @@ from repro.hwmodel import specs as S
 
 
 def ceil_to(n: int, m: int) -> int:
+    """Round ``n`` up to a multiple of ``m`` (systolic tile quantization:
+    the digital stage processes attention matmuls in 32x64 tiles, so
+    ``t_digital`` bills ceil32(N) * ceil64(N))."""
     return -(-n // m) * m
 
 
@@ -84,6 +87,19 @@ def t_digital(n_tokens: int, d_model: int) -> float:
 
 def stage_time(n_tokens: int, d_model: int) -> float:
     return max(t_analog(n_tokens), t_digital(n_tokens, d_model))
+
+
+def steady_state_fps(n_tokens: int, d_model: int = 768) -> float:
+    """Steady-state items/s of the fully weight-stationary pipeline once
+    every stage is occupied: one item leaves the last block every
+    ``stage_time`` (§5.3), so FPS = 1 / max(T_analog, T_digital).
+
+    This is the quantity reported per model in Table 7 — e.g. rows
+    ``vit-b16`` (N=197, d=768 -> 41,269 fps), ``bert-base`` (N=512,
+    d=768 -> 9,055 fps), ``vit-l14``/``bert-large`` (d=1024, Large
+    system) — and is what ``serving/pipeline.py``'s discrete-event model
+    must converge to once its twelve stages fill."""
+    return 1.0 / stage_time(n_tokens, d_model)
 
 
 def n_balance(sys: S.SystemSpec) -> float:

@@ -24,6 +24,7 @@ from repro import configs as C
 from repro.core import cim as cimlib
 from repro.layers.common import RunCtx, ShardingCtx, convert_params_mxfp4
 from repro.models import calibrate, lm
+from repro.models.lm import build_segments
 
 
 def build_backend(args, cfg, params):
@@ -58,10 +59,74 @@ def build_backend(args, cfg, params):
     raise SystemExit(f"unknown --backend {args.backend!r}")
 
 
+def serve_trace(args, cfg, params, ctx):
+    """Continuous-batching serving demo: a burst of staggered synthetic
+    requests through ``serving.Engine``, then the schedule mapped onto the
+    twelve-stage FWS pipeline model (simulated latency / throughput)."""
+    import numpy as np
+
+    from repro.serving import Engine, EngineConfig
+
+    # page budget: full-attention archs take prompt+tokens; sliding-window
+    # archs must keep the page inside the narrowest window (no ring wrap)
+    windows = [s.attn.window for s in build_segments(cfg)
+               if s.attn is not None and s.attn.window > 0]
+    page_len = args.prompt_len + args.tokens
+    if windows:
+        page_len = min(page_len, min(windows))
+    prefill_len = max(2, page_len - args.tokens)
+    ecfg = EngineConfig(
+        lanes=args.lanes, num_slots=args.slots, page_len=page_len,
+        prefill_len=prefill_len, policy=args.policy,
+    )
+    eng = Engine(params, cfg, ctx, ecfg)
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    for i in range(args.requests):
+        n = int(rng.integers(2, prefill_len + 1))
+        prompt = rng.integers(0, cfg.vocab_size, size=n).tolist()
+        eng.add_request(prompt, max_new=min(args.tokens,
+                                            page_len - n))
+        # staggered arrivals: a couple of engine steps between submissions
+        for _ in range(int(rng.integers(0, 3))):
+            eng.step()
+    out = eng.run()
+    dt = time.time() - t0
+    rep = eng.trace_report()
+    lat = sorted(rep.request_latency.values())
+    n_tok = sum(len(v) for v in out.values())
+    print(
+        f"{cfg.name} [{args.backend}] serve-trace: {len(out)} requests, "
+        f"{n_tok} tokens in {dt:.2f}s wall ({n_tok / dt:.1f} tok/s host)"
+    )
+    print(
+        f"  engine: policy={ecfg.policy} lanes={ecfg.lanes} "
+        f"slots={ecfg.num_slots} page={ecfg.page_len} "
+        f"slot_util={eng.slot_utilization:.2f}"
+    )
+    print(
+        f"  FWS pipeline model (d={cfg.d_model}): "
+        f"{rep.tokens_per_s:.0f} tok/s, steady-state "
+        f"{rep.pipeline.steady_state_fps:.0f} batches/s, stage util "
+        f"{rep.pipeline.stage_utilization:.2f} "
+        f"(analog {rep.pipeline.analog_utilization:.2f} / digital "
+        f"{rep.pipeline.digital_utilization:.2f} of busy)"
+    )
+    print(
+        f"  sim latency p50 {lat[len(lat) // 2] * 1e6:.1f}us / max "
+        f"{lat[-1] * 1e6:.1f}us"
+    )
+    for rid in sorted(out)[:4]:
+        print(f"  rid {rid}: {out[rid]}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma3-1b")
-    ap.add_argument("--tiny", action="store_true", default=True)
+    ap.add_argument("--tiny", action="store_true", default=True,
+                    help="reduced smoke config (default)")
+    ap.add_argument("--no-tiny", dest="tiny", action="store_false",
+                    help="run the full-size architecture")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--tokens", type=int, default=16)
@@ -77,6 +142,15 @@ def main():
                     default=True,
                     help="compile Pallas kernels instead of interpreting "
                          "(real TPU runs; requires --impl pallas)")
+    ap.add_argument("--serve-trace", action="store_true",
+                    help="continuous-batching engine demo: staggered "
+                         "requests + FWS pipeline occupancy report")
+    ap.add_argument("--requests", type=int, default=8,
+                    help="synthetic request count for --serve-trace")
+    ap.add_argument("--lanes", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=6)
+    ap.add_argument("--policy", default="prefill",
+                    choices=("prefill", "decode"))
     args = ap.parse_args()
 
     cfg = C.tiny(C.ARCHS[args.arch]) if args.tiny else C.ARCHS[args.arch]
@@ -84,6 +158,10 @@ def main():
         raise SystemExit(f"{cfg.name} is encoder-only; no decode")
     params, _ = lm.init_model(jax.random.PRNGKey(0), cfg)
     params, ctx = build_backend(args, cfg, params)
+
+    if args.serve_trace:
+        serve_trace(args, cfg, params, ctx)
+        return
 
     max_len = args.prompt_len + args.tokens
     caches = lm.init_cache(cfg, args.batch, max_len)

@@ -287,6 +287,68 @@ def make_decode_step(
     )
 
 
+def make_paged_decode_step(
+    cfg,
+    mesh: Mesh,
+    shape: C.Shape,
+    num_slots: int,
+    quant: str = "mxfp4_wonly",
+) -> StepBundle:
+    """Sharded continuous-batching decode step over a slot-paged KV pool.
+
+    ``shape.batch`` is the number of decode *lanes*; the pool holds
+    ``num_slots`` request pages plus one scratch row per lane (see
+    ``repro.serving.kvcache``). The pool's slot axis carries the logical
+    'batch' axis, so it shards exactly like the dense decode cache; lane
+    gathers/scatters (``jnp.take`` / ``.at[rows]``) lower to SPMD
+    all-gathers under the mesh. Inputs beyond the dense step: ``rows``
+    (int32 [lanes] pool-row per lane) and per-lane ``pos`` (int32
+    [lanes]).
+    """
+    from repro.serving import kvcache as kv_mod
+
+    lanes = shape.batch
+    ctx = RunCtx(
+        shd=shd.make_ctx(cfg, mesh, "decode", batch_size=lanes),
+        quant=quant, decode=True,
+    )
+    pstruct, specs = param_structs(cfg, serve_quant=quant == "mxfp4_wonly")
+    p_shard = shd.resolve_with_divisibility(specs, pstruct, ctx.shd, mesh)
+
+    cspecs = lm.cache_specs(cfg)
+    pool_struct = jax.eval_shape(
+        lambda: lm.init_cache(cfg, num_slots + lanes, shape.seq)
+    )
+    pool_shard = shd.resolve_with_divisibility(
+        cspecs, pool_struct, ctx.shd, mesh
+    )
+    i32 = jnp.int32
+    rows_s = jax.ShapeDtypeStruct((lanes,), i32)
+    ids_s = jax.ShapeDtypeStruct((lanes, 1), i32)
+    pos_s = jax.ShapeDtypeStruct((lanes,), i32)
+    ids_out = shd.resolve_with_divisibility(
+        ("batch",), jax.ShapeDtypeStruct((lanes,), i32), ctx.shd, mesh
+    )
+
+    def paged_step(params, pool, rows, ids, pos):
+        caches = kv_mod.gather_rows(pool, cspecs, rows)
+        logits, caches = lm.decode_step(params, cfg, ctx, ids, pos, caches)
+        pool = kv_mod.scatter_rows(pool, cspecs, rows, caches)
+        next_ids = jnp.argmax(logits.astype(jnp.float32), axis=-1)
+        return next_ids.astype(i32), pool
+
+    fn = jax.jit(
+        paged_step,
+        in_shardings=(p_shard, pool_shard, _replicated(mesh),
+                      _replicated(mesh), _replicated(mesh)),
+        out_shardings=(ids_out, pool_shard),
+        donate_argnums=(1,),
+    )
+    return StepBundle(
+        fn=fn, args=(pstruct, pool_struct, rows_s, ids_s, pos_s), ctx=ctx
+    )
+
+
 def make_step(cfg, mesh, shape: C.Shape, **kw) -> StepBundle:
     if shape.kind == "train":
         return make_train_step(cfg, mesh, shape, **kw)

@@ -76,15 +76,25 @@ def attn_init(key, cfg: AttnStatic):
     return p, s
 
 
+# Sentinel position marking padded K/V entries (fixed-shape serving
+# prefill, flash-attention tile padding). Any key whose position is at or
+# below the sentinel threshold is excluded from attention unconditionally —
+# a plain causal mask (kp <= qp) would otherwise *include* large-negative
+# pad positions for every query.
+KV_PAD = -(10**9)
+_KV_PAD_MIN = KV_PAD // 2
+
+
 def _mask(q_pos, k_pos, causal: bool, window: int):
-    """bool [..., Sq, Sk]; True = attend."""
+    """bool [..., Sq, Sk]; True = attend. Keys at KV_PAD never attend."""
     qp = q_pos[..., :, None]
     kp = k_pos[..., None, :]
-    m = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), bool)
+    m = jnp.broadcast_to(kp > _KV_PAD_MIN,
+                         jnp.broadcast_shapes(qp.shape, kp.shape))
     if causal:
-        m &= kp <= qp
+        m = m & (kp <= qp)
     if window > 0:
-        m &= kp > qp - window
+        m = m & (kp > qp - window)
     return m
 
 
@@ -177,7 +187,7 @@ def _flash_attn(q, k, v, q_pos, k_pos, cfg: AttnStatic, ctx: RunCtx,
     if pad_k:
         k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
-        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad_k)), constant_values=-(10**9))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad_k)), constant_values=KV_PAD)
     if pad_q:
         q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0), (0, 0)))
         q_pos = jnp.pad(q_pos, ((0, 0), (0, pad_q)))
@@ -276,6 +286,15 @@ def attn_apply(
     mx_dig = ctx.hybrid_digital_sdpa
     xn = norm_apply(cfg.norm, p["ln"], x)
     q, k, v = _qkv(ctx, cfg, p, xn, positions)
+    if s > 1:
+        # zero K/V at KV_PAD positions (fixed-shape padded serving
+        # prefill). The mask already excludes them from scores, but the
+        # digital-MXFP4 SDPA quantizes V in shared-exponent blocks along
+        # the key axis — garbage pad rows would perturb real rows' codes,
+        # and they would land in the decode cache.
+        kvm = (positions > _KV_PAD_MIN)[:, :, None, None]
+        k = jnp.where(kvm, k, jnp.zeros((), k.dtype))
+        v = jnp.where(kvm, v, jnp.zeros((), v.dtype))
     q = ctx.act(q.reshape(b, s, kv, g, hd), "batch", "seq", "kv_heads", "heads_g", "head_dim")
 
     if cache is not None and s > 1:
@@ -302,13 +321,18 @@ def attn_apply(
             o = _flash_attn(q, k, v, positions, positions, cfg, ctx,
                             mx_digital=mx_dig)
     elif cache is not None:
+        # pos may be a scalar (all lanes at the same position) or a [B]
+        # vector (continuous-batching serving: each lane decodes at its own
+        # position); both write slot pos % w per lane and mask per lane.
         w = cache["k"].shape[1]
-        slot = pos % w
-        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+        pos_b = jnp.broadcast_to(jnp.asarray(pos), (b,))
+        slot = pos_b % w
+        lanes = jnp.arange(b)
+        ck = cache["k"].at[lanes, slot].set(k[:, 0].astype(cache["k"].dtype))
+        cv = cache["v"].at[lanes, slot].set(v[:, 0].astype(cache["v"].dtype))
         new_cache = {"k": ck, "v": cv}
         idx = jnp.arange(w)
-        valid = (idx <= pos) | (pos >= w)
+        valid = (idx[None, :] <= pos_b[:, None]) | (pos_b[:, None] >= w)
         qd, kd = q, ck
         if mx_dig:  # digital MXFP4 systolic SDPA for the hybrid backend
             qd, kd = _mx_qk(q, ck)
@@ -317,7 +341,7 @@ def attn_apply(
         ) * cfg.scale
         if mx_dig:
             sc = _mx_score_round(sc)
-        sc = jnp.where(valid[None, None, None, None, :], sc, -jnp.inf)
+        sc = jnp.where(valid[:, None, None, None, :], sc, -jnp.inf)
         if mx_dig:
             pr, vd, den = _mx_pv(jax.nn.softmax(sc, axis=-1), cv)
             o = jnp.einsum("bhgqk,bkhd->bqhgd", pr / den, vd).astype(cv.dtype)

@@ -423,7 +423,13 @@ def forward(
     if "positions" in batch:
         positions = batch["positions"]
     elif pos is not None:
-        positions = jnp.broadcast_to(jnp.asarray(pos)[None, None], (b, s))
+        # scalar pos (all lanes aligned) or [B] vector (continuous-batching
+        # decode: each lane at its own position)
+        pos_arr = jnp.asarray(pos)
+        if pos_arr.ndim == 0:
+            positions = jnp.broadcast_to(pos_arr[None, None], (b, s))
+        else:
+            positions = jnp.broadcast_to(pos_arr[:, None], (b, s))
     else:
         positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
     x0 = x
@@ -483,8 +489,10 @@ def lm_loss(params, cfg: ArchConfig, ctx: RunCtx, batch, chunk: int = 1024):
 
 
 def decode_step(params, cfg: ArchConfig, ctx: RunCtx, ids, pos, caches):
-    """One decode step. ids [B, 1]; pos scalar int32 (current position).
-    Returns (logits [B, V], new_caches)."""
+    """One decode step. ids [B, 1]; pos scalar int32 (current position,
+    shared by all lanes) or int32 [B] (per-lane positions — the serving
+    engine's continuous-batching mode, where each lane advances
+    independently). Returns (logits [B, V], new_caches)."""
     batch = {"ids": ids}
     logits, new_caches = forward(params, cfg, ctx, batch, caches=caches, pos=pos)
     return logits[:, -1], new_caches

@@ -1,0 +1,12 @@
+"""Continuous-batching serving engine over the backend registry.
+
+Modules:
+  kvcache   — slot-paged KV pool (fixed page pool + pure-Python allocator)
+  scheduler — request queue, admission policies, stop conditions
+  pipeline  — discrete-event model of the §5.3 twelve-stage FWS pipeline
+  engine    — user-facing Engine.add_request/step/run API
+"""
+
+from repro.serving.engine import Engine, EngineConfig  # noqa: F401
+from repro.serving.kvcache import PagedKVCache, SlotAllocator  # noqa: F401
+from repro.serving.scheduler import Request, Scheduler  # noqa: F401

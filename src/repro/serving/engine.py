@@ -1,0 +1,205 @@
+"""Continuous-batching inference engine over the backend registry.
+
+``Engine`` glues the pieces together: a :class:`PagedKVCache` pool, a
+:class:`Scheduler`, and two *fixed-shape* jitted steps —
+
+  prefill  [1, prefill_len]   one padded prompt into its allocated slot
+  decode   [lanes, 1]         one token per lane at per-lane positions
+
+so XLA compiles each shape exactly once regardless of how requests come
+and go. Prompts are right-padded to ``prefill_len`` with ``KV_PAD``
+positions (masked out of attention by ``layers.attention._mask``); decode
+lanes without an active request park on their scratch row and their
+outputs are discarded on the host. Works under any linear-execution
+backend (float / mxfp4 / cim) because the steps just call
+``lm.forward``/``lm.decode_step`` with whatever converted params + RunCtx
+the caller built (see ``launch/serve.py::build_backend``).
+
+The engine also records an event trace — (kind, rids, n_tokens) per
+scheduled step — that ``serving/pipeline.py`` maps onto the twelve-stage
+FWS pipeline for simulated latency/throughput reporting.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.layers import attention as attn_mod
+from repro.models import lm
+from repro.serving import pipeline as pipe_mod
+from repro.serving.kvcache import PagedKVCache, gather_rows, scatter_rows
+from repro.serving.scheduler import Request, Scheduler
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    lanes: int = 4  # decode batch width
+    num_slots: int = 6  # KV pages in the pool (>= lanes to be useful)
+    page_len: int = 48  # positions per page (prompt + generated)
+    prefill_len: int = 16  # fixed prefill shape; prompts pad up to this
+    policy: str = "prefill"  # admission policy (see scheduler.py)
+
+
+class Engine:
+    def __init__(self, params, cfg, ctx, ecfg: EngineConfig = EngineConfig()):
+        if ecfg.prefill_len > ecfg.page_len:
+            raise ValueError("prefill_len must fit in a page")
+        self.params = params
+        self.cfg = cfg
+        self.ctx = ctx
+        self.ecfg = ecfg
+        self.kv = PagedKVCache(cfg, ecfg.num_slots, ecfg.lanes, ecfg.page_len)
+        self.sched = Scheduler(ecfg.lanes, ecfg.policy)
+        self.requests: dict[int, Request] = {}
+        self.trace: list = []  # (kind, rids, n_tokens) per scheduled step
+        self._next_rid = 0
+        self._step_idx = 0
+        self._prefill, self._decode = self._build_steps()
+
+    # ------------------------------------------------------- jitted steps
+
+    def _build_steps(self):
+        cfg, ctx, ecfg = self.cfg, self.ctx, self.ecfg
+        specs = self.kv.specs
+
+        def prefill(params, pool, ids, positions, row, last):
+            caches = lm.init_cache(cfg, 1, ecfg.page_len)
+            hidden, caches = lm.forward(
+                params, cfg, ctx, {"ids": ids, "positions": positions},
+                caches=caches, return_hidden=True,
+            )
+            # head over the real last position only (padded tail discarded).
+            # Pad rows of the written page are already zero: attn_apply
+            # zeroes K/V at KV_PAD positions and init_cache zero-fills
+            # beyond the prefill width.
+            logits = lm._head(ctx, cfg, params, hidden[:, last][:, None])
+            pool = scatter_rows(pool, specs, row, caches)
+            return jnp.argmax(logits[0, 0].astype(jnp.float32)), pool
+
+        def decode(params, pool, rows, ids, pos):
+            caches = gather_rows(pool, specs, rows)
+            logits, caches = lm.decode_step(params, cfg, ctx, ids, pos, caches)
+            pool = scatter_rows(pool, specs, rows, caches)
+            return jnp.argmax(logits.astype(jnp.float32), -1), pool
+
+        return (
+            jax.jit(prefill, donate_argnums=(1,)),
+            jax.jit(decode, donate_argnums=(1,)),
+        )
+
+    # --------------------------------------------------------- public API
+
+    def add_request(self, prompt, max_new: int, stop_token: int | None = None
+                    ) -> int:
+        prompt = [int(t) for t in prompt]
+        if not prompt or len(prompt) > self.ecfg.prefill_len:
+            raise ValueError(
+                f"prompt length {len(prompt)} not in [1, "
+                f"{self.ecfg.prefill_len}]"
+            )
+        if max_new < 1:
+            raise ValueError("max_new must be >= 1 (prefill emits a token)")
+        if len(prompt) + max_new > self.ecfg.page_len:
+            raise ValueError("prompt + max_new overflows the KV page")
+        rid = self._next_rid
+        self._next_rid += 1
+        req = Request(rid=rid, prompt=prompt, max_new=max_new,
+                      stop_token=stop_token, arrival=self._step_idx)
+        self.requests[rid] = req
+        self.sched.add(req)
+        return rid
+
+    def step(self) -> list:
+        """One scheduled unit of work (a prefill or a decode step).
+        Returns the requests that finished during this step."""
+        action = self.sched.plan(self.kv.num_free)
+        if action == "idle":
+            return []
+        self._step_idx += 1
+        if action == "prefill":
+            return self._run_prefill()
+        return self._run_decode()
+
+    def run(self, max_steps: int = 100_000) -> dict:
+        """Drive until every queued request completes. Returns
+        {rid: generated token list}."""
+        for _ in range(max_steps):
+            if not self.sched.has_work:
+                break
+            self.step()
+        if self.sched.has_work:
+            raise RuntimeError(f"engine did not drain in {max_steps} steps")
+        return {rid: list(r.out) for rid, r in self.requests.items()}
+
+    def trace_report(self) -> pipe_mod.TraceReport:
+        """Map the recorded schedule onto the FWS pipeline model."""
+        return pipe_mod.simulate_trace(
+            self.trace, self.cfg.d_model, self.ecfg.lanes
+        )
+
+    @property
+    def slot_utilization(self) -> float:
+        """Mean fraction of decode lanes doing live work (vs parked)."""
+        decodes = [len(rids) for kind, rids, _ in self.trace
+                   if kind == "decode"]
+        if not decodes:
+            return 1.0
+        return sum(decodes) / (self.ecfg.lanes * len(decodes))
+
+    # ----------------------------------------------------------- internals
+
+    def _run_prefill(self) -> list:
+        slot = self.kv.allocator.alloc()
+        req = self.sched.admit(slot, self._step_idx)
+        n = len(req.prompt)
+        p = self.ecfg.prefill_len
+        ids = np.zeros((1, p), np.int32)
+        ids[0, :n] = req.prompt
+        positions = np.full((1, p), attn_mod.KV_PAD, np.int32)
+        positions[0, :n] = np.arange(n)
+        tok, self.kv.pool = self._prefill(
+            self.params, self.kv.pool, jnp.asarray(ids),
+            jnp.asarray(positions), jnp.asarray([slot], jnp.int32),
+            jnp.int32(n - 1),
+        )
+        req.out.append(int(tok))
+        self.trace.append(("prefill", (req.rid,), n))
+        return self._retire([req])
+
+    def _run_decode(self) -> list:
+        ecfg = self.ecfg
+        rows = np.asarray(
+            [self.kv.scratch_row(i) for i in range(ecfg.lanes)], np.int32
+        )
+        ids = np.zeros((ecfg.lanes, 1), np.int32)
+        pos = np.zeros((ecfg.lanes,), np.int32)
+        active = sorted(self.sched.running.items())
+        for lane, req in active:
+            rows[lane] = req.slot
+            ids[lane, 0] = req.out[-1]
+            pos[lane] = req.pos
+        next_ids, self.kv.pool = self._decode(
+            self.params, self.kv.pool, jnp.asarray(rows), jnp.asarray(ids),
+            jnp.asarray(pos),
+        )
+        next_ids = np.asarray(next_ids)
+        for lane, req in active:
+            req.out.append(int(next_ids[lane]))
+            req.pos += 1
+        self.trace.append(
+            ("decode", tuple(r.rid for _, r in active), len(active))
+        )
+        return self._retire([r for _, r in active])
+
+    def _retire(self, reqs) -> list:
+        done = []
+        for req in reqs:
+            if Scheduler.stopped(req, self.ecfg.page_len):
+                self.sched.finish(req, self._step_idx)
+                self.kv.allocator.free(req.slot)
+                done.append(req)
+        return done

@@ -1,0 +1,130 @@
+"""Slot-paged KV cache for continuous-batching decode.
+
+The pool is the ordinary per-segment cache tree from ``lm.init_cache``,
+allocated once with ``num_slots + lanes`` rows along the batch axis and
+``page_len`` positions along the cache-sequence axis. The first
+``num_slots`` rows are *slots* — one resident page per in-flight request,
+handed out by the pure-Python :class:`SlotAllocator`. The trailing
+``lanes`` rows are per-lane *scratch* rows: an idle decode lane is parked
+on its own scratch row, so the lane->row index vector is always injective
+and the jitted gather (``jnp.take``) / scatter (``.at[rows].set``) pair
+stays deterministic with no masking inside the step.
+
+    pool row:   0 .. num_slots-1          request pages (allocator-owned)
+                num_slots .. +lanes-1     scratch rows (lane i parks on
+                                          row num_slots + i)
+
+Cache leaves are not all batch-leading — scanned segments stack a layer
+axis in front (``("layers", "batch", ...)``), so the batch-axis index per
+leaf comes from ``lm.cache_specs``. ``gather_rows``/``scatter_rows`` are
+pure functions over (pool, rows) and are meant to be called *inside* the
+jitted prefill/decode steps.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.models import lm
+
+
+@dataclasses.dataclass
+class SlotAllocator:
+    """LIFO free-list over ``num_slots`` page slots. Host-side only."""
+
+    num_slots: int
+
+    def __post_init__(self):
+        self._free = list(range(self.num_slots - 1, -1, -1))
+        self._used: set[int] = set()
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> set[int]:
+        return set(self._used)
+
+    def alloc(self) -> int | None:
+        if not self._free:
+            return None
+        slot = self._free.pop()
+        self._used.add(slot)
+        return slot
+
+    def free(self, slot: int) -> None:
+        if slot not in self._used:
+            raise ValueError(f"slot {slot} is not allocated")
+        self._used.remove(slot)
+        self._free.append(slot)
+
+
+def _batch_axis(spec: tuple) -> int:
+    return spec.index("batch")
+
+
+def gather_rows(pool, specs, rows):
+    """Gather cache rows ``rows`` (int32 [R]) out of the pool along each
+    leaf's batch axis -> a regular R-row cache tree for lm.decode_step."""
+    out = []
+    for seg_cache, seg_spec in zip(pool, specs):
+        out.append({
+            k: jnp.take(v, rows, axis=_batch_axis(seg_spec[k]))
+            for k, v in seg_cache.items()
+        })
+    return out
+
+
+def scatter_rows(pool, specs, rows, values):
+    """Write an R-row cache tree back into pool rows ``rows``. Rows must
+    be unique (slots are, and idle lanes park on per-lane scratch rows)."""
+    out = []
+    for seg_pool, seg_spec, seg_val in zip(pool, specs, values):
+        seg = {}
+        for k, v in seg_pool.items():
+            ax = _batch_axis(seg_spec[k])
+            idx = (slice(None),) * ax + (rows,)
+            seg[k] = v.at[idx].set(seg_val[k].astype(v.dtype))
+        out.append(seg)
+    return out
+
+
+class PagedKVCache:
+    """Fixed pool of KV pages + slot allocator for one served model."""
+
+    def __init__(self, cfg, num_slots: int, lanes: int, page_len: int):
+        for seg in lm.build_segments(cfg):
+            if seg.kind not in ("attn", "moe_attn"):
+                raise NotImplementedError(
+                    "paged serving requires attention-only segments "
+                    f"(recurrent state can't take padded prefill): {seg.kind}"
+                )
+            if seg.attn.window and seg.attn.window < page_len:
+                raise NotImplementedError(
+                    "paged serving needs full pages (window "
+                    f"{seg.attn.window} < page_len {page_len}); ring-wrap "
+                    "SWA pages are future work"
+                )
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.lanes = lanes
+        self.page_len = page_len
+        self.specs = lm.cache_specs(cfg)
+        self.pool = lm.init_cache(cfg, num_slots + lanes, page_len)
+        self.allocator = SlotAllocator(num_slots)
+
+    def scratch_row(self, lane: int) -> int:
+        return self.num_slots + lane
+
+    @property
+    def num_free(self) -> int:
+        return self.allocator.num_free
+
+    def gather(self, rows):
+        return gather_rows(self.pool, self.specs, rows)
+
+    def scatter(self, rows, values) -> None:
+        self.pool = scatter_rows(self.pool, self.specs, rows, values)

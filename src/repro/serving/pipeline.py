@@ -1,0 +1,147 @@
+"""Discrete-event model of the paper's §5.3 twelve-stage FWS pipeline.
+
+MXFormer statically partitions the model's twelve transformer blocks over
+twelve chip blocks; a scheduled batch (a prefill of N prompt tokens, or
+one decode step over B active lanes = B tokens) streams through the
+stages in order. Each stage holds a job for
+``perf.stage_time(n_tokens, d_model)`` = max(T_analog, T_digital): the
+analog CTT arrays consume one token per BITPLANES*MUX*PASSES = 20 analog
+cycles while the two 32x64 systolic arrays run the tile-quantized
+attention matmuls, and the slower side bounds the stage.
+
+The simulator is a plain in-order, non-preemptive event model: job j
+enters stage k at ``max(job j leaves stage k-1, stage k free)``. Once all
+stages are occupied one job drains per ``stage_time`` — the steady-state
+throughput must match ``perf.steady_state_fps`` and, for the paper's
+encoder workloads, the Table 7 FPS figures (checked within 5% in
+tests/test_serving.py).
+
+``simulate_trace`` maps the serving engine's (kind, rids, n_tokens) event
+trace onto the pipeline and attributes per-request latency: a request is
+live from the entry of its prefill job to the drain of the last job that
+carried one of its tokens.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.hwmodel import perf
+
+N_STAGES = 12  # transformer blocks per die (hwmodel.specs.SystemSpec)
+
+
+@dataclasses.dataclass(frozen=True)
+class Job:
+    arrival: float  # seconds; jobs are served FIFO in arrival order
+    n_tokens: int
+    tag: object = None
+
+
+@dataclasses.dataclass(frozen=True)
+class JobTiming:
+    job: Job
+    start: float  # entry into stage 0
+    finish: float  # drain out of the last stage
+
+    @property
+    def latency(self) -> float:
+        return self.finish - self.job.arrival
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineReport:
+    timings: list
+    makespan: float
+    stage_utilization: float  # busy fraction of one stage over makespan
+    analog_utilization: float  # analog busy fraction *within* busy time
+    digital_utilization: float
+    fps: float  # jobs drained / makespan
+    steady_state_fps: float  # tail-window throughput (pipeline full)
+
+
+def simulate(jobs: list, d_model: int, n_stages: int = N_STAGES,
+             warmup: int | None = None) -> PipelineReport:
+    """Run ``jobs`` (FIFO by list order) through the n-stage pipeline."""
+    if not jobs:
+        return PipelineReport([], 0.0, 0.0, 0.0, 0.0, 0.0, 0.0)
+    free_at = [0.0] * n_stages
+    timings = []
+    busy = 0.0
+    t_analog_busy = 0.0
+    t_digital_busy = 0.0
+    for job in jobs:
+        t_stage = perf.stage_time(job.n_tokens, d_model)
+        t = max(job.arrival, free_at[0])
+        start = t
+        for k in range(n_stages):
+            t = max(t, free_at[k])
+            free_at[k] = t + t_stage
+            t = t + t_stage
+        timings.append(JobTiming(job, start, t))
+        busy += t_stage  # per stage
+        t_analog_busy += perf.t_analog(job.n_tokens)
+        t_digital_busy += perf.t_digital(job.n_tokens, d_model)
+    makespan = max(x.finish for x in timings)
+    # steady state: drain spacing once the pipeline is full
+    warmup = n_stages if warmup is None else warmup
+    warmup = min(warmup, len(timings) - 1)
+    tail = timings[warmup:]
+    span = tail[-1].finish - timings[warmup - 1].finish if warmup else None
+    ss_fps = len(tail) / span if span else len(timings) / makespan
+    return PipelineReport(
+        timings=timings,
+        makespan=makespan,
+        stage_utilization=busy / makespan if makespan else 0.0,
+        analog_utilization=t_analog_busy / busy if busy else 0.0,
+        digital_utilization=t_digital_busy / busy if busy else 0.0,
+        fps=len(timings) / makespan if makespan else 0.0,
+        steady_state_fps=ss_fps,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceReport:
+    pipeline: PipelineReport
+    request_latency: dict  # rid -> seconds (prefill entry -> last token out)
+    tokens_per_s: float  # generated tokens drained / makespan
+    lane_utilization: float  # live lanes / (lanes * decode steps)
+
+
+def simulate_trace(events: list, d_model: int, lanes: int,
+                   n_stages: int = N_STAGES) -> TraceReport:
+    """Map an engine event trace onto the pipeline.
+
+    ``events``: list of (kind, rids, n_tokens) — kind 'prefill' (one
+    request's padded prompt) or 'decode' (one token for each rid; for the
+    static-batching reference n_tokens may exceed len(rids): dead lanes
+    still occupy the hardware). Jobs all arrive at t=0 back-to-back — the
+    host scheduler is assumed to keep the pipeline fed.
+    """
+    jobs = [Job(0.0, n, (kind, rids)) for kind, rids, n in events]
+    rep = simulate(jobs, d_model, n_stages)
+    first_in: dict = {}
+    last_out: dict = {}
+    n_generated = 0
+    live = 0
+    decode_steps = 0
+    for timing in rep.timings:
+        kind, rids = timing.job.tag
+        for rid in rids:
+            first_in.setdefault(rid, timing.start)
+            last_out[rid] = timing.finish
+        if kind == "prefill":
+            n_generated += 1  # prefill emits the first token
+        else:
+            n_generated += len(rids)
+            live += len(rids)
+            decode_steps += 1
+    latency = {rid: last_out[rid] - first_in[rid] for rid in first_in}
+    return TraceReport(
+        pipeline=rep,
+        request_latency=latency,
+        tokens_per_s=n_generated / rep.makespan if rep.makespan else 0.0,
+        lane_utilization=(
+            live / (lanes * decode_steps) if decode_steps else 1.0
+        ),
+    )

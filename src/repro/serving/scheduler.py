@@ -1,0 +1,130 @@
+"""Continuous-batching request scheduler.
+
+Pure host-side control: it owns the waiting queue and the lane->request
+map and decides, step by step, whether the engine should run a prefill
+(admit one queued request into a free lane + free slot) or a decode step
+over the currently active lanes. The jitted steps themselves are fixed
+shape; inactive lanes ride along parked on scratch rows.
+
+Policies:
+  ``prefill`` (prefill-prioritized, throughput-first): admit whenever a
+      request is waiting and a lane and a KV slot are free — fills the
+      batch as fast as possible, at the cost of stalling in-flight decodes
+      for one prefill step per admission.
+  ``decode`` (decode-prioritized, latency-first): keep decoding while any
+      lane is active; admissions happen only when the engine would
+      otherwise idle (no active lanes).
+
+Stop conditions, checked after every generated token: ``max_new_tokens``
+reached, the optional per-request ``stop_token`` sampled, or the KV page
+exhausted (``pos == page_len``). Completion frees both the lane and the
+KV slot (eviction), immediately re-admittable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new: int
+    stop_token: int | None = None
+    arrival: int = 0  # engine step index at which the request was added
+    # runtime state (engine-owned)
+    lane: int = -1
+    slot: int = -1
+    pos: int = 0  # next decode position == len(prompt) + len(out)
+    out: list[int] = dataclasses.field(default_factory=list)
+    prefill_step: int = -1  # engine step index of the prefill
+    finish_step: int = -1
+
+    @property
+    def done(self) -> bool:
+        return self.finish_step >= 0
+
+
+class Scheduler:
+    def __init__(self, lanes: int, policy: str = "prefill"):
+        if policy not in ("prefill", "decode"):
+            raise ValueError(f"unknown scheduling policy {policy!r}")
+        self.lanes = lanes
+        self.policy = policy
+        self.waiting: deque[Request] = deque()
+        self.running: dict[int, Request] = {}  # lane -> request
+        self._free_lanes = list(range(lanes - 1, -1, -1))
+
+    # ------------------------------------------------------------- queries
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    @property
+    def num_active(self) -> int:
+        return len(self.running)
+
+    def plan(self, free_slots: int) -> str:
+        """Next engine action: 'prefill' | 'decode' | 'idle'."""
+        can_admit = bool(self.waiting) and bool(self._free_lanes) \
+            and free_slots > 0
+        if can_admit and (self.policy == "prefill" or not self.running):
+            return "prefill"
+        if self.running:
+            return "decode"
+        return "idle"
+
+    # ----------------------------------------------------------- mutation
+
+    def add(self, req: Request) -> None:
+        self.waiting.append(req)
+
+    def admit(self, slot: int, step: int) -> Request:
+        """Pop the next waiting request onto a free lane with KV slot
+        ``slot``. Caller (the engine) allocated the slot."""
+        req = self.waiting.popleft()
+        req.lane = self._free_lanes.pop()
+        req.slot = slot
+        req.pos = len(req.prompt)
+        req.prefill_step = step
+        self.running[req.lane] = req
+        return req
+
+    def finish(self, req: Request, step: int) -> None:
+        """Evict a completed request: frees the lane (the engine frees the
+        KV slot, which it owns via the allocator)."""
+        req.finish_step = step
+        del self.running[req.lane]
+        self._free_lanes.append(req.lane)
+
+    @staticmethod
+    def stopped(req: Request, page_len: int) -> bool:
+        return (
+            len(req.out) >= req.max_new
+            or (req.stop_token is not None and req.out
+                and req.out[-1] == req.stop_token)
+            or req.pos >= page_len
+        )
+
+
+def static_batching_plan(requests: list[Request], lanes: int):
+    """Reference naive static batching: requests grouped ``lanes`` at a
+    time; each group prefills every member, then decodes until the
+    *longest* member finishes (no eviction, no backfill). Returns the same
+    (kind, rids, n_tokens) event-trace format the engine emits, for the
+    pipeline model's continuous-vs-static comparison."""
+    events = []
+    for g in range(0, len(requests), lanes):
+        group = requests[g:g + lanes]
+        for r in group:
+            events.append(("prefill", (r.rid,), len(r.prompt)))
+        steps = max(r.max_new - 1 for r in group) if group else 0
+        for t in range(steps):
+            live = tuple(r.rid for r in group if r.max_new - 1 > t)
+            # every lane of the group occupies the pipeline whether or not
+            # its request is still live — that's the waste being measured
+            events.append(("decode", live, len(group)))
+    return events
