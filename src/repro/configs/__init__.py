@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.lm import ArchConfig
+from repro.models.vit import ViTConfig
 
 from repro.configs import (  # noqa: E402
     gemma3_1b,
@@ -20,6 +21,8 @@ from repro.configs import (  # noqa: E402
     qwen2_vl_7b,
     qwen3_moe_235b,
     starcoder2_7b,
+    vit_b16,
+    vit_l32,
     xlstm_125m,
     zamba2_1_2b,
 )
@@ -39,6 +42,36 @@ ARCHS: dict[str, ArchConfig] = {
         qwen2_vl_7b,
     )
 }
+
+# Executable vision (encoder) workloads — the paper's own evaluation
+# family, first-class next to the LM archs. ``tiny_vit`` shrinks width for
+# CPU smoke; ``geometry_tiny_vit`` keeps the paper's token geometry
+# (patch grid, CLS, layer count, chip split) while shrinking width, so the
+# serving engine's *measured stage traffic* still reproduces Table 7.
+VISION_ARCHS: dict[str, ViTConfig] = {
+    c.CONFIG.name: c.CONFIG for c in (vit_b16, vit_l32)
+}
+
+
+def tiny_vit(cfg: ViTConfig) -> ViTConfig:
+    """Reduced vision config for CPU smoke tests. patch_dim stays
+    32-aligned (8*8*3 = 192) so the patch embedding remains
+    analog-eligible, exercising the full hybrid conversion path."""
+    return dataclasses.replace(
+        cfg, image_size=32, patch_size=8, n_layers=2, d_model=64,
+        n_heads=4, head_dim=16, d_ff=96, n_classes=32, chips=1,
+    )
+
+
+def geometry_tiny_vit(cfg: ViTConfig) -> ViTConfig:
+    """Width-reduced but geometry-true: same image/patch grid (so the same
+    token count N), same layer count and chip split as the full workload —
+    the shape the FWS pipeline bills — with tiny d_model/d_ff so the
+    executable forward is CPU-affordable."""
+    return dataclasses.replace(
+        cfg, d_model=64, n_heads=4, head_dim=16, d_ff=96, n_classes=32,
+    )
+
 
 # Paper's own short-sequence encoder workloads (hwmodel / accuracy benches).
 PAPER_ARCHS: dict[str, ArchConfig] = {

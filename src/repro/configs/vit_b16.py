@@ -1,0 +1,12 @@
+"""vit-b16 [ViT-B/16, 224px]: the paper's single-chip headline workload
+(Table 7: 41,269 FPS on the Base system; N = 14*14 + 1 = 197 tokens,
+matching ``hwmodel.specs.WORKLOADS['vit-b16']``)."""
+from repro.models.vit import ViTConfig
+
+CONFIG = ViTConfig(
+    name="vit-b16",
+    image_size=224, patch_size=16,
+    n_layers=12, d_model=768, n_heads=12, d_ff=3072,
+    n_classes=1000,
+    ffn_kind="gelu", norm="layernorm", use_bias=True,
+)

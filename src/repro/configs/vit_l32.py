@@ -1,0 +1,14 @@
+"""vit-l32 [ViT-L/32, 384px]: the paper's dual-chip headline workload
+(Table 7: 58,275 FPS on two Large chips; N = 12*12 + 1 = 145 tokens,
+24 encoder blocks statically split 12+12 across the two chips, matching
+``hwmodel.specs.WORKLOADS['vit-l32']``)."""
+from repro.models.vit import ViTConfig
+
+CONFIG = ViTConfig(
+    name="vit-l32",
+    image_size=384, patch_size=32,
+    n_layers=24, d_model=1024, n_heads=16, d_ff=4096,
+    n_classes=1000,
+    ffn_kind="gelu", norm="layernorm", use_bias=True,
+    chips=2,
+)

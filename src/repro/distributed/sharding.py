@@ -112,6 +112,28 @@ def zero_rules(rules: dict, mesh: Mesh, enabled: bool = True) -> dict:
     return r
 
 
+def stage_partition(n_layers: int, n_chips: int) -> list[tuple[int, int]]:
+    """Balanced contiguous split of a layer-stacked trunk over pipeline
+    stages/chips: ``[(lo, hi), ...)`` half-open layer ranges, earlier chips
+    taking the remainder (vit-l32 / bert-large: 24 layers, 2 chips ->
+    [(0, 12), (12, 24)] — the paper's §5.3 dual-chip FWS deployment).
+
+    This is the serving-time analogue of the mesh rules above: instead of
+    sharding one op over devices, whole blocks are pinned per chip (fully
+    weight-stationary — weights never move, activations hop)."""
+    if not 1 <= n_chips <= n_layers:
+        raise ValueError(f"need 1 <= n_chips ({n_chips}) <= n_layers "
+                         f"({n_layers})")
+    base, rem = divmod(n_layers, n_chips)
+    bounds = []
+    lo = 0
+    for c in range(n_chips):
+        hi = lo + base + (1 if c < rem else 0)
+        bounds.append((lo, hi))
+        lo = hi
+    return bounds
+
+
 def resolve_with_divisibility(specs, shapes, ctx: ShardingCtx, mesh: Mesh):
     """Resolve specs -> NamedSharding, dropping mesh axes whose size does
     not divide the corresponding dim (needed for ZeRO on odd shapes)."""

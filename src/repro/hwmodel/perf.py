@@ -89,6 +89,14 @@ def stage_time(n_tokens: int, d_model: int) -> float:
     return max(t_analog(n_tokens), t_digital(n_tokens, d_model))
 
 
+def t_interchip(n_tokens: int, d_model: int) -> float:
+    """One inter-chip hop in a multi-chip FWS pipeline (vit-l32 /
+    bert-large: 24 blocks split 12+12): the [N, d] bf16 activation tile
+    crosses the chip-to-chip link. Far below ``stage_time`` for every
+    Table-7 shape, so the hop adds latency but never bounds throughput."""
+    return n_tokens * d_model * 2 / (S.INTERCHIP_GBPS * 1e9)
+
+
 def steady_state_fps(n_tokens: int, d_model: int = 768) -> float:
     """Steady-state items/s of the fully weight-stationary pipeline once
     every stage is occupied: one item leaves the last block every

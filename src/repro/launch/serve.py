@@ -6,10 +6,16 @@ conversion to resident analog CTT arrays, then an end-to-end *hybrid*
 analog/digital decode — static linears on the ``cim_analog`` backend,
 SDPA on the digital MXFP4 systolic path. ``--backend float``: bf16.
 
+``--model vit-b16`` / ``--model vit-l32`` serve the vision (encoder)
+workloads instead: a single-stream frame engine whose measured stage
+traffic drives the twelve-stage FWS pipeline model and is cross-checked
+against the paper's Table 7 FPS row (dual-chip 12+12 for vit-l32).
+
 Local smoke:
   PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --tiny \
       --tokens 16
   PYTHONPATH=src python -m repro.launch.serve --tiny --backend cim
+  PYTHONPATH=src python -m repro.launch.serve --model vit-b16 --backend cim
 """
 
 from __future__ import annotations
@@ -27,8 +33,14 @@ from repro.models import calibrate, lm
 from repro.models.lm import build_segments
 
 
-def build_backend(args, cfg, params):
-    """Returns (converted_params, RunCtx) for the requested backend."""
+def build_backend(args, cfg, params, batches=None, forward_fn=None,
+                  mxfp4_min_n: int = 256):
+    """Returns (converted_params, RunCtx) for the requested backend.
+
+    ``batches``/``forward_fn`` select the calibration capture for the cim
+    backend (default: LM token batches through ``lm.forward``; the vision
+    path passes synthetic images through ``vit.forward``).
+    """
     shd = ShardingCtx()
     kw = dict(shd=shd, dense_attn_max=256, impl=args.impl,
               interpret=args.interpret)
@@ -36,7 +48,7 @@ def build_backend(args, cfg, params):
         return params, RunCtx(**kw)
     if args.backend == "mxfp4":
         return (
-            convert_params_mxfp4(params),
+            convert_params_mxfp4(params, min_n=mxfp4_min_n),
             RunCtx(quant="mxfp4_wonly", **kw),
         )
     if args.backend == "cim":
@@ -44,14 +56,15 @@ def build_backend(args, cfg, params):
             adc_bits=args.adc_bits, cm_bits=args.cm_bits, two_pass=True
         )
         base_ctx = RunCtx(shd=shd, dense_attn_max=256)
-        batches = calibrate.calibration_batches(
-            cfg, n_batches=args.calib_batches, batch=args.batch,
-            seq=args.prompt_len,
-        )
+        if batches is None:
+            batches = calibrate.calibration_batches(
+                cfg, n_batches=args.calib_batches, batch=args.batch,
+                seq=args.prompt_len,
+            )
         t0 = time.time()
         conv, calibs = calibrate.convert_model_cim(
             params, cfg, base_ctx, batches,
-            cim_cfg=cim_cfg, min_n=args.cim_min_n,
+            cim_cfg=cim_cfg, min_n=args.cim_min_n, forward_fn=forward_fn,
         )
         print(f"row-hist calibration: {len(calibs)} static linears -> "
               f"analog arrays in {time.time() - t0:.1f}s")
@@ -120,9 +133,55 @@ def serve_trace(args, cfg, params, ctx):
         print(f"  rid {rid}: {out[rid]}")
 
 
+def serve_vision(args, cfg_full):
+    """Vision (encoder) serving: stream frames through the fixed-shape
+    jitted forward, then cross-validate the measured stage traffic against
+    the paper's Table 7 row on the FWS pipeline model."""
+    from repro.hwmodel import specs as S
+    from repro.models import vit
+    from repro.serving.vision import VisionEngine
+
+    # --tiny keeps the paper's token geometry (patch grid, layers, chips)
+    # and shrinks only the width, so the measured traffic still reproduces
+    # Table 7; --no-tiny runs the full-size model.
+    cfg = C.geometry_tiny_vit(cfg_full) if args.tiny else cfg_full
+    params, _ = vit.init_model(jax.random.PRNGKey(0), cfg)
+    batches = vit.calibration_images(
+        cfg, n_batches=args.calib_batches, batch=args.batch
+    )
+    params, ctx = build_backend(
+        args, cfg, params, batches=batches, forward_fn=vit.forward,
+        mxfp4_min_n=args.cim_min_n,
+    )
+    eng = VisionEngine(params, cfg, ctx)
+    frames = jax.random.normal(
+        jax.random.PRNGKey(1),
+        (args.frames, cfg.image_size, cfg.image_size, cfg.in_channels),
+    )
+    t0 = time.time()
+    labels = eng.stream(frames)
+    dt = time.time() - t0
+    print(
+        f"{cfg.name} [{args.backend}] vision-stream: {len(labels)} frames "
+        f"({cfg.seq_len} tokens each) in {dt:.2f}s wall "
+        f"({len(labels) / dt:.1f} fps host); top-1 = {labels}"
+    )
+    workload = cfg_full.name if cfg_full.name in S.WORKLOADS else None
+    rep = eng.fws_report(workload=workload)
+    line = (
+        f"  FWS pipeline ({rep.chips} chip(s), d={rep.d_model}, "
+        f"N={rep.n_tokens}): {rep.fps:.0f} fps steady-state, "
+        f"frame latency {rep.frame_latency_s * 1e6:.1f}us"
+    )
+    if rep.paper_fps:
+        line += (f" | paper Table 7: {rep.paper_fps} fps "
+                 f"({100 * rep.fps_error:.2f}% err)")
+    print(line)
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="gemma3-1b")
+    ap.add_argument("--arch", "--model", dest="arch", default="gemma3-1b")
     ap.add_argument("--tiny", action="store_true", default=True,
                     help="reduced smoke config (default)")
     ap.add_argument("--no-tiny", dest="tiny", action="store_false",
@@ -151,7 +210,13 @@ def main():
     ap.add_argument("--slots", type=int, default=6)
     ap.add_argument("--policy", default="prefill",
                     choices=("prefill", "decode"))
+    ap.add_argument("--frames", type=int, default=4,
+                    help="synthetic frame count for vision (--model vit-*)")
     args = ap.parse_args()
+
+    if args.arch in C.VISION_ARCHS:
+        serve_vision(args, C.VISION_ARCHS[args.arch])
+        return
 
     cfg = C.tiny(C.ARCHS[args.arch]) if args.tiny else C.ARCHS[args.arch]
     if not cfg.supports_decode:

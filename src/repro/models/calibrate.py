@@ -38,10 +38,16 @@ def capture_rowhist_calibration(
     max_rows: int = 512,
     calib_quant: str = "mxfp4_digital",
     wq_cache: dict | None = None,
+    forward_fn=None,
 ) -> dict[str, cimlib.LayerCalib]:
     """Run ``batches`` (list of model-input dicts) through the model with
     an ActivationTap and return ``{param-tree path: LayerCalib}`` for every
     static analog-eligible linear. Runs eagerly — do not call under jit.
+
+    ``forward_fn(params, cfg, ctx, batch)`` selects the model family
+    (default ``lm.forward``; pass ``vit.forward`` for encoders) — the
+    capture is model-agnostic: any forward that routes its static linears
+    through ``linear_apply`` with stable param-tree-path names calibrates.
 
     The capture executes on the *digital MXFP4* path by default
     (``calib_quant="mxfp4_digital"``), not bf16 float: at serving time each
@@ -50,10 +56,11 @@ def capture_rowhist_calibration(
     guarantee (zero overflow) valid at deployment. With a lossless CIM
     config this makes the hybrid model *exactly* the digital MXFP4 model.
     """
+    forward_fn = forward_fn or lm.forward
     tap = backends.ActivationTap(min_n=min_n, max_rows=max_rows)
     cap_ctx = dataclasses.replace(ctx, quant=calib_quant, tap=tap, scope="")
     for batch in batches:
-        lm.forward(params, cfg, cap_ctx, batch)
+        forward_fn(params, cfg, cap_ctx, batch)
     return backends.calibrate_taps(
         tap, cim_cfg or cimlib.CIMConfig(), wq_cache=wq_cache
     )
@@ -68,19 +75,23 @@ def convert_model_cim(
     cim_cfg: cimlib.CIMConfig | None = None,
     min_n: int = 256,
     max_rows: int = 512,
+    forward_fn=None,
 ):
     """Full offline pipeline: capture -> Row-Hist calibrate -> convert.
 
     Returns ``(converted_params, calibs)``. The converted tree holds
     resident INT5 codes + exponents + per-layer calib for the analog
     layers, packed MXFP4 for MoE expert banks, bf16 for everything else.
-    Serve with ``RunCtx(quant="cim", cim=cim_cfg)``.
+    Serve with ``RunCtx(quant="cim", cim=cim_cfg)``. ``forward_fn``
+    selects the model family (default ``lm.forward``, see
+    :func:`capture_rowhist_calibration`).
     """
     cim_cfg = cim_cfg or cimlib.CIMConfig()
     wq_cache: dict = {}  # quantize each analog weight once, not twice
     calibs = capture_rowhist_calibration(
         params, cfg, ctx, batches,
         cim_cfg=cim_cfg, min_n=min_n, max_rows=max_rows, wq_cache=wq_cache,
+        forward_fn=forward_fn,
     )
     converted = backends.convert_params_cim(
         params, calibs, min_n=min_n, wq_cache=wq_cache

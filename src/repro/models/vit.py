@@ -1,0 +1,295 @@
+"""Encoder-only Vision Transformer on the hybrid CIM layer stack.
+
+This is the paper's own evaluation workload family (Table 7 is ViT/BERT
+rows) made *executable* instead of closed-form: patch embedding (unfold +
+linear, so it dispatches through ``layers/backends.py`` like every other
+static linear), a learned CLS token + position embeddings, pre-LN encoder
+blocks reused verbatim from the LM stack (``lm.Segment``/``_run_segment``:
+same scan/unroll machinery, same ``segments/<i>/L<j>/...`` capture paths,
+so ``models/calibrate.py`` Row-Hist calibration and ``convert_params_cim``
+work unchanged), and a classification head over the CLS token.
+
+Encoder semantics: full bidirectional attention (``causal=False``), no
+RoPE (positions are learned embeddings), no KV cache and no decode step —
+one fixed-shape forward per image. Under the hybrid backend the SDPA runs
+the digital MXFP4 systolic path from ``layers/attention.py`` exactly as
+for the LMs; QKV/O, FFN, patch embedding and head convert to resident
+analog CTT arrays.
+
+Dual-chip deployments (vit-l32: 24 blocks split 12+12, paper §5.3) slice
+the layer-stacked trunk with ``distributed.sharding.stage_partition`` —
+``split_chips`` + ``forward_chip`` below; ``serving/vision.py`` drives the
+chip chain with an explicit inter-chip activation hop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers import attention as attn_mod
+from repro.layers.common import (
+    RunCtx,
+    linear_apply,
+    linear_init,
+    norm_apply,
+    norm_init,
+)
+from repro.models import lm
+
+
+@dataclasses.dataclass(frozen=True)
+class ViTConfig:
+    name: str
+    image_size: int
+    patch_size: int
+    n_layers: int
+    d_model: int
+    n_heads: int
+    d_ff: int
+    n_classes: int = 1000
+    in_channels: int = 3
+    head_dim: int = 0
+    ffn_kind: str = "gelu"
+    norm: str = "layernorm"
+    use_bias: bool = True
+    remat: bool = False
+    chips: int = 1  # FWS stage partition (dual-chip vit-l32 / bert-large)
+    # unused by the encoder but read by shared lm machinery signatures
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+
+    @property
+    def grid(self) -> int:
+        assert self.image_size % self.patch_size == 0, (
+            self.image_size, self.patch_size)
+        return self.image_size // self.patch_size
+
+    @property
+    def n_patches(self) -> int:
+        return self.grid * self.grid
+
+    @property
+    def seq_len(self) -> int:
+        return self.n_patches + 1  # CLS token
+
+    @property
+    def patch_dim(self) -> int:
+        return self.patch_size * self.patch_size * self.in_channels
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+
+def _attn_static(cfg: ViTConfig) -> attn_mod.AttnStatic:
+    return attn_mod.AttnStatic(
+        d_model=cfg.d_model,
+        n_heads=cfg.n_heads,
+        n_kv=cfg.n_heads,  # encoder ViT/BERT: full MHA, no GQA
+        head_dim=cfg.hd,
+        causal=False,
+        use_rope=False,  # learned absolute position embeddings
+        use_bias=cfg.use_bias,
+        norm=cfg.norm,
+    )
+
+
+def build_segments(cfg: ViTConfig) -> list[lm.Segment]:
+    return [lm.Segment("attn", cfg.n_layers, attn=_attn_static(cfg))]
+
+
+# ---------------------------------------------------------------- init
+
+def init_model(key, cfg: ViTConfig):
+    """Returns (params, specs); same (tree, logical-axis-spec-tree) shape
+    contract as ``lm.init_model``."""
+    segments = build_segments(cfg)
+    keys = jax.random.split(key, len(segments) + 4)
+    params: dict[str, Any] = {}
+    specs: dict[str, Any] = {}
+    params["patch"], specs["patch"] = linear_init(
+        keys[-1], cfg.patch_dim, cfg.d_model, use_bias=cfg.use_bias,
+        in_axis="conv", out_axis="embed",
+    )
+    params["cls"] = jax.random.normal(
+        keys[-2], (1, 1, cfg.d_model), jnp.float32) * 0.02
+    specs["cls"] = (None, None, "embed")
+    params["pos"] = jax.random.normal(
+        keys[-3], (1, cfg.seq_len, cfg.d_model), jnp.float32) * 0.02
+    specs["pos"] = (None, "seq", "embed")
+    seg_params, seg_specs = [], []
+    for i, seg in enumerate(segments):
+        ps = [
+            lm._block_init(k, cfg, seg)
+            for k in jax.random.split(keys[i], seg.n)
+        ]
+        p = lm._stack([x[0] for x in ps])
+        s = jax.tree.map(
+            lambda ax: ("layers",) + ax,
+            ps[0][1],
+            is_leaf=lambda x: isinstance(x, tuple),
+        )
+        seg_params.append(p)
+        seg_specs.append(s)
+    params["segments"] = seg_params
+    specs["segments"] = seg_specs
+    params["final_ln"], specs["final_ln"] = norm_init(cfg.norm, cfg.d_model)
+    params["head"], specs["head"] = linear_init(
+        keys[-4], cfg.d_model, cfg.n_classes, use_bias=cfg.use_bias,
+        out_axis="vocab",
+    )
+    return params, specs
+
+
+# -------------------------------------------------------------- forward
+
+def patchify(images: jax.Array, patch: int) -> jax.Array:
+    """[B, H, W, C] -> [B, (H/p)*(W/p), p*p*C] non-overlapping unfold (the
+    conv patch embedding expressed as unfold + shared linear, so the
+    projection executes through the backend registry)."""
+    b, h, w, c = images.shape
+    gh, gw = h // patch, w // patch
+    x = images.reshape(b, gh, patch, gw, patch, c)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b, gh * gw, patch * patch * c)
+
+
+def embed_images(ctx: RunCtx, cfg: ViTConfig, params, images) -> jax.Array:
+    """Patch-embed + CLS prepend + learned position embeddings."""
+    x = patchify(images.astype(jnp.float32), cfg.patch_size)
+    x = linear_apply(ctx, params["patch"], x, name="patch")
+    cls = jnp.broadcast_to(
+        params["cls"].astype(x.dtype), (x.shape[0], 1, cfg.d_model)
+    )
+    x = jnp.concatenate([cls, x], axis=1)
+    x = x + params["pos"].astype(x.dtype)
+    return x.astype(jnp.bfloat16)
+
+
+def encode(
+    params_seg,
+    cfg: ViTConfig,
+    ctx: RunCtx,
+    x: jax.Array,
+    n_layers: int | None = None,
+    scope_index: int = 0,
+) -> jax.Array:
+    """Run the (possibly layer-sliced) stacked encoder trunk."""
+    n = n_layers or cfg.n_layers
+    seg = lm.Segment("attn", n, attn=_attn_static(cfg))
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    if n == 1:
+        # vit params are always layer-stacked (uniform conversion paths);
+        # lm._run_segment's n==1 shortcut expects unstacked params
+        params_seg = jax.tree.map(lambda a: a[0], params_seg)
+    x, _ = lm._run_segment(
+        ctx.scoped(f"segments/{scope_index}"), cfg, seg, params_seg, x,
+        positions, None, None, None, x,
+    )
+    return x
+
+
+def head(ctx: RunCtx, cfg: ViTConfig, params, x: jax.Array) -> jax.Array:
+    """Final LN + CLS pool + classifier -> [B, n_classes]."""
+    x = norm_apply(cfg.norm, params["final_ln"], x)
+    logits = linear_apply(ctx, params["head"], x[:, :1], name="head")
+    return ctx.act(logits, "batch", "seq", "vocab")[:, 0]
+
+
+def forward(
+    params,
+    cfg: ViTConfig,
+    ctx: RunCtx,
+    batch: dict,
+    caches=None,
+    pos=None,
+    return_hidden: bool = False,
+):
+    """batch: {'images': [B, H, W, C] float}. Returns (logits [B, classes]
+    or hidden [B, S, d], None) — the ``(out, new_caches)`` contract of
+    ``lm.forward`` with no cache (encoders have none), so the calibration
+    capture and serving plumbing treat both model families uniformly."""
+    del caches, pos  # encoder: no KV cache, no decode step
+    x = embed_images(ctx, cfg, params, batch["images"])
+    x = ctx.act(x, "batch", "seq", "embed")
+    x = encode(params["segments"][0], cfg, ctx, x)
+    if return_hidden:
+        return norm_apply(cfg.norm, params["final_ln"], x), None
+    return head(ctx, cfg, params, x), None
+
+
+# ------------------------------------------------------- chip partition
+
+def split_chips(params, cfg: ViTConfig, n_chips: int | None = None):
+    """Slice the layer-stacked trunk into per-chip param trees using the
+    balanced contiguous ``distributed.sharding.stage_partition`` (vit-l32:
+    24 layers -> 12+12). Chip 0 keeps the embedding front (patch/cls/pos);
+    the last chip keeps final_ln + head. Works on float, MXFP4-packed and
+    CIM-converted trees alike: every stacked leaf (weights, codes, exps,
+    per-layer ``e_n``/``adc_fs`` calib) carries the layer axis first."""
+    from repro.distributed.sharding import stage_partition
+
+    n_chips = n_chips or cfg.chips
+    bounds = stage_partition(cfg.n_layers, n_chips)
+    chips = []
+    for ci, (lo, hi) in enumerate(bounds):
+        sub: dict[str, Any] = {
+            "segments": [
+                jax.tree.map(lambda a: a[lo:hi], params["segments"][0])
+            ],
+        }
+        if ci == 0:
+            for k in ("patch", "cls", "pos"):
+                sub[k] = params[k]
+        if ci == n_chips - 1:
+            sub["final_ln"] = params["final_ln"]
+            sub["head"] = params["head"]
+        chips.append((sub, hi - lo))
+    return chips
+
+
+def forward_chip(
+    chip_params,
+    cfg: ViTConfig,
+    ctx: RunCtx,
+    inp,
+    n_layers: int,
+    first: bool,
+    last: bool,
+):
+    """One chip's share of the pipeline: ``inp`` is the image batch on the
+    first chip, the previous chip's hidden state (the inter-chip hop
+    payload) otherwise. Returns logits on the last chip, hidden else."""
+    if first:
+        x = embed_images(ctx, cfg, chip_params, inp)
+    else:
+        x = inp.astype(jnp.bfloat16)
+    x = encode(chip_params["segments"][0], cfg, ctx, x, n_layers=n_layers)
+    if last:
+        return head(ctx, cfg, chip_params, x)
+    return x
+
+
+# ----------------------------------------------------------- calibration
+
+def calibration_images(cfg: ViTConfig, n_batches: int = 2, batch: int = 2,
+                       seed: int = 1234):
+    """Synthetic representative image batches for smoke-scale Row-Hist
+    calibration (the vision analogue of ``calibrate.calibration_batches``)."""
+    out = []
+    for i in range(n_batches):
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), i)
+        out.append({
+            "images": jax.random.normal(
+                key,
+                (batch, cfg.image_size, cfg.image_size, cfg.in_channels),
+                jnp.float32,
+            )
+        })
+    return out

@@ -4,9 +4,17 @@ Modules:
   kvcache   — slot-paged KV pool (fixed page pool + pure-Python allocator)
   scheduler — request queue, admission policies, stop conditions
   pipeline  — discrete-event model of the §5.3 twelve-stage FWS pipeline
-  engine    — user-facing Engine.add_request/step/run API
+              (single- and multi-chip with inter-chip hop stages)
+  engine    — user-facing Engine.add_request/step/run API (decoder LMs)
+  vision    — single-stream image-throughput engine for encoder (ViT)
+              workloads: measured stage traffic -> Table 7 FPS
 """
 
 from repro.serving.engine import Engine, EngineConfig  # noqa: F401
 from repro.serving.kvcache import PagedKVCache, SlotAllocator  # noqa: F401
 from repro.serving.scheduler import Request, Scheduler  # noqa: F401
+from repro.serving.vision import (  # noqa: F401
+    VisionEngine,
+    VisionReport,
+    synthetic_stream_report,
+)

@@ -14,7 +14,14 @@ enters stage k at ``max(job j leaves stage k-1, stage k free)``. Once all
 stages are occupied one job drains per ``stage_time`` — the steady-state
 throughput must match ``perf.steady_state_fps`` and, for the paper's
 encoder workloads, the Table 7 FPS figures (checked within 5% in
-tests/test_serving.py).
+tests/test_serving.py and tests/test_vision.py).
+
+Multi-chip deployments (``chips > 1``: vit-l32 / bert-large split their
+24 blocks 12+12 over two chips) chain ``chips`` copies of the
+``n_stages`` compute stages with one inter-chip hop stage between
+consecutive chips (``perf.t_interchip``: the [N, d] bf16 activation tile
+crossing the link). The hop deepens the pipeline — more fill latency —
+but never bounds steady-state throughput for the paper's shapes.
 
 ``simulate_trace`` maps the serving engine's (kind, rids, n_tokens) event
 trace onto the pipeline and attributes per-request latency: a request is
@@ -61,30 +68,42 @@ class PipelineReport:
 
 
 def simulate(jobs: list, d_model: int, n_stages: int = N_STAGES,
-             warmup: int | None = None) -> PipelineReport:
-    """Run ``jobs`` (FIFO by list order) through the n-stage pipeline."""
+             warmup: int | None = None, chips: int = 1) -> PipelineReport:
+    """Run ``jobs`` (FIFO by list order) through the pipeline.
+
+    With ``chips > 1`` the stage chain is ``chips`` copies of the
+    ``n_stages`` compute stages separated by one inter-chip hop stage each
+    (``perf.t_interchip``); utilization accounting covers the compute
+    stages only (the hop is link occupancy, not array occupancy).
+    """
     if not jobs:
         return PipelineReport([], 0.0, 0.0, 0.0, 0.0, 0.0, 0.0)
-    free_at = [0.0] * n_stages
+    total_stages = chips * n_stages + (chips - 1)
+    hop_at = set(
+        c * (n_stages + 1) + n_stages for c in range(chips - 1)
+    )  # stage indices occupied by the inter-chip link
+    free_at = [0.0] * total_stages
     timings = []
     busy = 0.0
     t_analog_busy = 0.0
     t_digital_busy = 0.0
     for job in jobs:
         t_stage = perf.stage_time(job.n_tokens, d_model)
+        t_hop = perf.t_interchip(job.n_tokens, d_model) if chips > 1 else 0.0
         t = max(job.arrival, free_at[0])
         start = t
-        for k in range(n_stages):
+        for k in range(total_stages):
+            t_k = t_hop if k in hop_at else t_stage
             t = max(t, free_at[k])
-            free_at[k] = t + t_stage
-            t = t + t_stage
+            free_at[k] = t + t_k
+            t = t + t_k
         timings.append(JobTiming(job, start, t))
-        busy += t_stage  # per stage
+        busy += t_stage  # per compute stage
         t_analog_busy += perf.t_analog(job.n_tokens)
         t_digital_busy += perf.t_digital(job.n_tokens, d_model)
     makespan = max(x.finish for x in timings)
     # steady state: drain spacing once the pipeline is full
-    warmup = n_stages if warmup is None else warmup
+    warmup = total_stages if warmup is None else warmup
     warmup = min(warmup, len(timings) - 1)
     tail = timings[warmup:]
     span = tail[-1].finish - timings[warmup - 1].finish if warmup else None
