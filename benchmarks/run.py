@@ -442,6 +442,163 @@ def vit_fws_pipeline():
 
 
 @bench
+def backend_latency():
+    """Fused quantized hot path: per-backend forward/decode latency on a
+    block-aligned tiny LM -> BENCH_backends.json.
+
+    Measures (i) the tiny forward under float / mxfp4 / cim, (ii) decode
+    step latency vs cache length per backend — for cim both with the
+    quantized-resident KV pool and against the requant-per-step reference
+    (legacy cache) — and (iii) the per-token KV-quantization primitive
+    itself, where the resident path is O(1) in cache length and the
+    reference is O(cache_len).
+
+    Methodology notes: the model keeps every quantized dim 32-aligned
+    (the paper's head dims are >= 64; a 16-wide smoke head pads every
+    SDPA block to 32, which benchmarks the pad, not the datapath).
+    Timings interleave the variants round-robin and take the per-variant
+    minimum — wall time on shared CI boxes drifts by integer factors, and
+    round-robin + min recovers comparable uncontended latencies.
+    """
+    import dataclasses
+    import json
+
+    from repro import configs as C
+    from repro.layers import attention as attn_mod
+    from repro.layers.common import RunCtx, ShardingCtx, convert_params_mxfp4
+    from repro.models import calibrate, lm
+
+    base = C.tiny(C.ARCHS["starcoder2-7b"])
+    cfg = dataclasses.replace(base, n_heads=2, n_kv_heads=2, head_dim=32)
+    params, _ = lm.init_model(jax.random.PRNGKey(0), cfg)
+    ctx = RunCtx(shd=ShardingCtx(), dense_attn_max=256)
+    cim_cfg = cimlib.CIMConfig()
+    batches = calibrate.calibration_batches(cfg, n_batches=2, batch=2, seq=16)
+    conv, _ = calibrate.convert_model_cim(
+        params, cfg, ctx, batches, cim_cfg=cim_cfg, min_n=32
+    )
+    variants = {
+        "float": (params, ctx),
+        "mxfp4": (convert_params_mxfp4(params),
+                  dataclasses.replace(ctx, quant="mxfp4_wonly")),
+        "cim": (conv, dataclasses.replace(ctx, quant="cim", cim=cim_cfg)),
+    }
+
+    def interleaved_min(fns, reps=50):
+        best = {k: float("inf") for k in fns}
+        for k, f in fns.items():  # warm/compile
+            f()
+        order = list(fns)
+        for r in range(reps):
+            for k in order:
+                t0 = time.perf_counter()
+                fns[k]()
+                best[k] = min(best[k], time.perf_counter() - t0)
+            order = order[1:] + order[:1]  # rotate: cancel ordering bias
+        return {k: v * 1e6 for k, v in best.items()}
+
+    # ---- tiny forward (seq 32 — the repo's tiny smoke geometry; the
+    # digital-SDPA P-quantize scales with S^2, so longer sequences mostly
+    # benchmark the SDPA simulation rather than the linear hot path)
+    batch = {"ids": jax.random.randint(jax.random.PRNGKey(9), (2, 32), 0,
+                                       cfg.vocab_size)}
+    fwd_fns = {}
+    for name, (p, c) in variants.items():
+        f = jax.jit(lambda pp, b, c=c: lm.forward(pp, cfg, c, b)[0])
+        fwd_fns[name] = (
+            lambda f=f, p=p: f(p, batch).block_until_ready()
+        )
+    forward_us = interleaved_min(fwd_fns)
+
+    # ---- decode latency vs cache length (per-lane pos, jitted step)
+    cache_lens = (64, 256, 1024)
+    decode_us: dict = {}
+    for W in cache_lens:
+        fns = {}
+        for name, (p, c) in variants.items():
+            for label, mx_pool in (
+                (name, c.hybrid_digital_sdpa),
+                (f"{name}_requant", False),
+            ):
+                if label.endswith("_requant") and not c.hybrid_digital_sdpa:
+                    continue  # requant reference only differs for cim
+                caches = lm.init_cache(cfg, 2, W, mx_digital=mx_pool)
+                _, caches = lm.forward(
+                    p, cfg, c, {"ids": batch["ids"][:, :16]}, caches=caches
+                )
+                step = jax.jit(
+                    lambda pp, cc, i, pos, c=c: lm.decode_step(
+                        pp, cfg, c, i, pos, cc
+                    )
+                )
+                ids = jnp.ones((2, 1), jnp.int32)
+                pos = jnp.int32(W - 1)
+                fns[label] = (
+                    lambda step=step, p=p, caches=caches, ids=ids, pos=pos:
+                    step(p, caches, ids, pos)[0].block_until_ready()
+                )
+        decode_us[W] = interleaved_min(fns)
+
+    # ---- per-token KV quantization primitive: resident O(1) vs
+    # requant-per-step O(cache_len)
+    kv_quant_us: dict = {}
+    b, h, d = 2, cfg.n_kv_heads, cfg.hd
+    for W in cache_lens:
+        key = jax.random.PRNGKey(W)
+        ck = jax.random.normal(key, (b, W, h, d), jnp.bfloat16)
+        cv = jax.random.normal(key, (b, W, h, d), jnp.bfloat16)
+        qc = attn_mod.quant_cache_init(b, W, h, d)
+        lanes = jnp.arange(b)
+        slot = jnp.full((b,), W - 1, jnp.int32)
+        jreq = jax.jit(lambda ck, cv: (
+            mxlib.fake_quant(ck.astype(jnp.float32)),
+            mxlib.fake_quant_axis(cv.astype(jnp.float32), 1),
+        ))
+        jres = jax.jit(attn_mod._quant_cache_step)
+        kv_quant_us[W] = interleaved_min({
+            "resident": lambda: jax.tree.map(
+                lambda x: x.block_until_ready(),
+                jres(qc, ck, cv, lanes, slot),
+            ),
+            "requant": lambda: jax.tree.map(
+                lambda x: x.block_until_ready(), jreq(ck, cv)
+            ),
+        })
+
+    ratios = {
+        "mxfp4_vs_float": forward_us["mxfp4"] / forward_us["float"],
+        "cim_vs_float": forward_us["cim"] / forward_us["float"],
+    }
+    res_flat = (
+        kv_quant_us[cache_lens[-1]]["resident"]
+        / max(kv_quant_us[cache_lens[0]]["resident"], 1e-9)
+    )
+    req_growth = (
+        kv_quant_us[cache_lens[-1]]["requant"]
+        / max(kv_quant_us[cache_lens[0]]["requant"], 1e-9)
+    )
+    result = {
+        "arch": cfg.name,
+        "note": "tiny LM, 32-aligned head_dim; interleaved min-of-reps",
+        "tiny_forward_latency_us": forward_us,
+        "forward_ratio": ratios,
+        "decode_latency_us": {str(w): v for w, v in decode_us.items()},
+        "kv_quant_step_us": {str(w): v for w, v in kv_quant_us.items()},
+        "kv_quant_resident_growth_64_to_1024": res_flat,
+        "kv_quant_requant_growth_64_to_1024": req_growth,
+    }
+    with open("BENCH_backends.json", "w") as f:
+        json.dump(result, f, indent=2)
+    return (
+        f"fwd us f/m/c {forward_us['float']:.0f}/{forward_us['mxfp4']:.0f}/"
+        f"{forward_us['cim']:.0f} (mxfp4 {ratios['mxfp4_vs_float']:.2f}x, "
+        f"cim {ratios['cim_vs_float']:.2f}x); KV-quant growth 64->1024: "
+        f"resident {res_flat:.2f}x vs requant {req_growth:.2f}x "
+        f"-> BENCH_backends.json"
+    )
+
+
+@bench
 def fig12_seqlen_sweep():
     rows = perf.fig12_sweep()
     peak = max(rows, key=lambda r: r["tops"])
@@ -535,6 +692,7 @@ def main(argv=None) -> None:
         hybrid_backend_tiny_lm,
         serving_engine_tiny_lm,
         vit_fws_pipeline,
+        backend_latency,
         fig12_seqlen_sweep,
         table7_models,
         table8_gpu_comparison,

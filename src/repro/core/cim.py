@@ -25,6 +25,7 @@ max observed block exponent, eliminating overflow) and online ``row0`` /
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import NamedTuple
 
 import jax
@@ -99,13 +100,132 @@ def _en_scale(e_n, delta: int = 0) -> jax.Array:
     return sc
 
 
+# ------------------------------------------------- blockwise (scan) core
+
+def _xq_blocks(x: jax.Array, k: int):
+    """Quantize activations straight to the code domain and expose the
+    32-block structure: (cx [..., nb, 32] f32 codes, ex [..., nb] int32)."""
+    xq = mxlib.quantize(x[..., :k])
+    nb = xq.codes.shape[-1] // BLOCK
+    cx = xq.codes.reshape(xq.codes.shape[:-1] + (nb, BLOCK)).astype(jnp.float32)
+    return cx, xq.exps.astype(jnp.int32), nb
+
+
+def _scan_blocks(cx, ex, w: MXW, e_n, cfg: CIMConfig):
+    """``lax.scan`` over the 32-blocks: each step forms one block's exact
+    integer partial [..., N], aligns it to the scalar Row-Hist target
+    ``e_n`` under the CM window, and accumulates into the running
+    (pass-1, pass-2) sums — O(N) live memory instead of the O(nb * N)
+    block-partial materialization, and the same sequential block order as
+    the Pallas kernel's ``fori_loop``.
+
+    Returns (c1 [..., N], c2 [..., N], counts int32 [4] =
+    (overflow, underflow_p1, underflow_p2, live-blocks), counts all zero
+    unless ``cfg.collect_stats``).
+    """
+    cm = cfg.cm_bits
+    nb = cx.shape[-2]
+    wc = w.codes.astype(jnp.float32).reshape(nb, BLOCK, -1)
+    e_n = jnp.asarray(e_n, jnp.int32)
+    # The alignment runs in the *linear* domain: with uv = 2^(E_X - E_N)
+    # * 2^(E_W) — a product of exact powers of two, so bit-exact —
+    #   2^clip(sh, -cm, 0) * [sh >= -cm]  ==  where(uv < 2^-cm, 0, min(uv, 1))
+    # because 2^x is monotone. Three elementwise ops per block-pass instead
+    # of the integer clip/shift chain; the selected scales are bitwise the
+    # same powers of two.
+    u = mxlib.exp2i(ex - e_n)  # [..., nb]
+    v = mxlib.exp2i(w.exps.astype(jnp.int32))  # [nb, N] (static per call)
+    lo = 2.0 ** -cm
+    lo2 = 2.0 ** -(2 * cm)
+
+    def block(carry, cxb, ub, wcb, vb):
+        c1, c2, cnt = carry
+        s = jnp.einsum(
+            "...k,kn->...n", cxb, wcb, preferred_element_type=jnp.float32
+        )  # exact: |S| <= 32*144, f32 accumulation
+        uv = ub[..., None] * vb  # 2^sh, exact
+        under1 = uv < lo
+        c1 = c1 + s * jnp.where(under1, 0.0, jnp.minimum(uv, 1.0))
+        if cfg.two_pass:
+            # pass-2 target E_N2 = E_N - CM: window sh in [-2cm, -cm)
+            c2 = c2 + s * jnp.where(
+                under1 & (uv >= lo2), uv * (2.0 ** cm), 0.0
+            )
+        if cfg.collect_stats:
+            nz = jnp.abs(s) > 0  # only blocks with nonzero partials matter
+            # pass-2 underflow only exists when a second pass runs (the
+            # materialized reference reports 0.0 for single-pass configs)
+            under12 = (uv < lo2) & nz if cfg.two_pass else jnp.zeros_like(nz)
+            cnt = cnt + jnp.stack([
+                jnp.sum((uv > 1.0) & nz, dtype=jnp.int32),
+                jnp.sum(under1 & nz, dtype=jnp.int32),
+                jnp.sum(under12, dtype=jnp.int32),
+                jnp.sum(nz, dtype=jnp.int32),
+            ])
+        return c1, c2, cnt
+
+    zero = jnp.zeros(cx.shape[:-2] + (wc.shape[-1],), jnp.float32)
+    carry = (zero, zero, jnp.zeros((4,), jnp.int32))
+    if nb <= 8:
+        # hidden-size block counts: a flat Python loop over direct slices
+        # (no moveaxis transposes, no scan carry plumbing) compiles to the
+        # leanest graph; the accumulation order is identical to the scan
+        for b in range(nb):
+            carry = block(carry, cx[..., b, :], u[..., b], wc[b], v[b])
+        return carry
+    cxs = jnp.moveaxis(cx, -2, 0)  # [nb, ..., 32]
+    us = jnp.moveaxis(u, -1, 0)  # [nb, ...]
+    (c1, c2, cnt), _ = jax.lax.scan(
+        lambda c, xs: (block(c, *xs), None), carry, (cxs, us, wc, v),
+        unroll=8,
+    )
+    return c1, c2, cnt
+
+
 def cim_linear(
     x: jax.Array,
     w: MXW,
     cfg: CIMConfig,
     calib: LayerCalib | None = None,
 ):
-    """Analog CIM forward. Returns (y[..., M] float32, stats dict)."""
+    """Analog CIM forward. Returns (y[..., M] float32, stats dict).
+
+    The offline-calibrated ``row_hist`` strategy (the serving hot path)
+    runs the blockwise scan core; the online ``row0``/``row_opt``
+    baselines need the full block-exponent field and keep the materialized
+    reference composition.
+    """
+    if cfg.strategy == "row_hist":
+        assert calib is not None, "row_hist needs offline calibration"
+        cx, ex, _ = _xq_blocks(x, w.codes.shape[0])
+        c1, c2, cnt = _scan_blocks(cx, ex, w, calib.e_n, cfg)
+        y = _adc(c1, calib.adc_fs, cfg.adc_bits) * _en_scale(calib.e_n) * 0.25
+        if cfg.two_pass:
+            y = y + (
+                _adc(c2, calib.adc_fs, cfg.adc_bits)
+                * _en_scale(calib.e_n, cfg.cm_bits) * 0.25
+            )
+        stats = {}
+        if cfg.collect_stats:
+            tot = jnp.maximum(cnt[3], 1)
+            stats = {
+                "overflow_rate": cnt[0] / tot,
+                "underflow_rate_p1": cnt[1] / tot,
+                "underflow_rate_p2": cnt[2] / tot,
+            }
+        return y.astype(jnp.float32), stats
+    return _cim_linear_materialized(x, w, cfg, calib)
+
+
+def _cim_linear_materialized(
+    x: jax.Array,
+    w: MXW,
+    cfg: CIMConfig,
+    calib: LayerCalib | None = None,
+):
+    """Reference composition over the materialized [..., nb, N] block
+    partials (needed by the online strategies, whose target exponent is a
+    function of the whole exponent field)."""
     s, es = _block_partials(x, w)
     e_n = _target_exponent(cfg, calib, es)
     sh = es - e_n  # required shift; exact iff -CM <= sh <= 0
@@ -149,42 +269,71 @@ def cim_linear(
 
 # ------------------------------------------------------------ calibration
 
+@jax.jit
+def _calib_max_exponent(x: jax.Array, w: MXW) -> jax.Array:
+    """Max live block-output exponent over one batch, blockwise (O(N)
+    live memory, jitted — the calibration capture runs eagerly, so each
+    per-batch pass compiles once per activation shape)."""
+    cx, ex, nb = _xq_blocks(x, w.codes.shape[0])
+    wc = w.codes.astype(jnp.float32).reshape(nb, BLOCK, -1)
+    we = w.exps.astype(jnp.int32)
+
+    def body(m, xs):
+        cxb, exb, wcb, web = xs
+        s = jnp.einsum(
+            "...k,kn->...n", cxb, wcb, preferred_element_type=jnp.float32
+        )
+        es = exb[..., None] + web
+        cand = jnp.where(jnp.abs(s) > 0, es, -(10**6))
+        return jnp.maximum(m, jnp.max(cand)), None
+
+    m, _ = jax.lax.scan(
+        body, jnp.int32(-(10**6)),
+        (jnp.moveaxis(cx, -2, 0), jnp.moveaxis(ex, -1, 0), wc, we),
+    )
+    return m
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _calib_full_scale(x: jax.Array, w: MXW, e_n, cfg: CIMConfig):
+    """Max |per-pass column sum| over one batch at target ``e_n`` —
+    the same blockwise accumulation as the forward, so the calibrated
+    full scale covers exactly what the forward's ADC sees."""
+    cx, ex, _ = _xq_blocks(x, w.codes.shape[0])
+    c1, c2, _ = _scan_blocks(
+        cx, ex, w, e_n, dataclasses.replace(cfg, collect_stats=False)
+    )
+    fs = jnp.max(jnp.abs(c1))
+    if cfg.two_pass:
+        fs = jnp.maximum(fs, jnp.max(jnp.abs(c2)))
+    return fs
+
+
 def calibrate_rowhist(
     batches, w: MXW, cfg: CIMConfig, percentile: float = 100.0
 ) -> LayerCalib:
     """Offline Row-Hist calibration (paper §3.2.1): pick the per-layer
     target exponent from the distribution of block output exponents over
     representative batches (prioritising zero overflow => max), then
-    calibrate the ADC full scale at that E_N.
+    calibrate the ADC full scale at that E_N. Both passes run jitted and
+    blockwise; the sub-100 percentile variant needs the full exponent
+    histogram and keeps the materialized path.
     """
     e_n = None
     for xb in batches:
-        s, es = _block_partials(xb, w)
-        live = jnp.abs(s) > 0
-        cand = jnp.where(live, es, -(10**6))
         if percentile >= 100.0:
-            m = jnp.max(cand)
+            m = _calib_max_exponent(xb, w)
         else:
+            s, es = _block_partials(xb, w)
+            live = jnp.abs(s) > 0
             m = jnp.percentile(jnp.where(live, es, jnp.nan), percentile)
             m = jnp.asarray(jnp.ceil(m), jnp.int32)
         e_n = m if e_n is None else jnp.maximum(e_n, m)
     e_n = jnp.asarray(e_n, jnp.int32)
 
     fs = jnp.float32(0.0)
-    cm = cfg.cm_bits
     for xb in batches:
-        s, es = _block_partials(xb, w)
-        sh = es - e_n
-        a1 = jnp.where(sh < -cm, 0.0, s * mxlib.exp2i(jnp.clip(sh, -cm, 0)))
-        fs = jnp.maximum(fs, jnp.max(jnp.abs(jnp.sum(a1, axis=-2))))
-        if cfg.two_pass:
-            sh2 = sh + cm
-            a2 = jnp.where(
-                (sh < -cm) & (sh2 >= -cm),
-                s * mxlib.exp2i(jnp.clip(sh2, -cm, 0)),
-                0.0,
-            )
-            fs = jnp.maximum(fs, jnp.max(jnp.abs(jnp.sum(a2, axis=-2))))
+        fs = jnp.maximum(fs, _calib_full_scale(xb, w, e_n, cfg))
     return LayerCalib(e_n=e_n, adc_fs=fs)
 
 

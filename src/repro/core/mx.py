@@ -13,6 +13,7 @@ All functions are jit-friendly pure jnp.
 
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple
 
 import jax
@@ -62,6 +63,24 @@ def exp2i(e: jax.Array) -> jax.Array:
     return f(h1) * f(h2)
 
 
+def floor_ilog2(x: jax.Array) -> jax.Array:
+    """Exact ``floor(log2(x))`` (int32) for finite ``x >= 0`` read straight
+    from the IEEE-754 exponent field — no ``log2``/``floor`` transcendentals.
+
+    ``jnp.log2`` is not correctly rounded: for ``x`` one ulp *below* a
+    power of two it rounds up to the integer, so ``floor(log2(x))`` built
+    from it overshoots by one (measured on CPU). This version is the true
+    floor everywhere normal. Zero and subnormal inputs read as exponents
+    ``<= -127``; every caller here clamps at the E8M0 floor (-127) or at
+    the E2M1 element floor (0), so the exact subnormal exponent never
+    matters.
+    """
+    bits = jax.lax.bitcast_convert_type(
+        jnp.asarray(x, jnp.float32), jnp.int32
+    )
+    return ((bits >> 23) & 0xFF) - 127
+
+
 def _pad_last(x: jax.Array, multiple: int = BLOCK) -> jax.Array:
     k = x.shape[-1]
     rem = (-k) % multiple
@@ -71,32 +90,88 @@ def _pad_last(x: jax.Array, multiple: int = BLOCK) -> jax.Array:
     return x
 
 
+def _quant_scaled(xb: jax.Array):
+    """Shared bit-level core of :func:`quantize` / :func:`fake_quant`.
+
+    ``xb``: f32 blocks [..., nb, 32]. Returns ``(code_mag, ebf)`` where
+    ``code_mag`` f32 [..., nb, 32] is ``2 * |fp4|`` in {0..12} and ``ebf``
+    int32 [..., nb, 1] is the *biased* shared exponent field, clipped to
+    [2, 254] so ``e_shared = ebf - 129`` covers exactly the E8M0 range
+    [-127, 125] (zero / subnormal amax lands on the -127 floor, matching
+    the OCP zero-block rule). Everything runs on IEEE-754 fields — one
+    reduce plus a short fuseable elementwise chain, no transcendentals.
+    """
+    ax = jnp.abs(xb)
+    amax = jnp.max(ax, axis=-1, keepdims=True)
+    ebf = jnp.clip(
+        (jax.lax.bitcast_convert_type(amax, jnp.int32) >> 23) & 0xFF, 2, 254
+    )
+    # y = |x| * 2^(129 - ebf) = |x| / 2^e_shared, exact power-of-two mul
+    y = ax * jax.lax.bitcast_convert_type((256 - ebf) << 23, jnp.float32)
+    # E2M1 round ties-to-even on the local grid (binade from the field)
+    e = jnp.clip(
+        (jax.lax.bitcast_convert_type(y, jnp.int32) >> 23) - 127, 0, EMAX_ELEM
+    )
+    q = jnp.rint(y * jax.lax.bitcast_convert_type((128 - e) << 23, jnp.float32))
+    q = q * jax.lax.bitcast_convert_type((126 + e) << 23, jnp.float32)
+    q = jnp.minimum(q, FP4_MAX)
+    return 2.0 * q, ebf
+
+
 def quantize_e2m1(y: jax.Array) -> jax.Array:
     """Round ``y`` to the E2M1 grid (round-to-nearest-even), returning
-    integer codes ``2 * fp4`` as int8. Input must already be scaled."""
+    integer codes ``2 * fp4`` as int8. Input must already be scaled.
+
+    Transcendental-free: the local grid binade comes from the IEEE
+    exponent field (:func:`floor_ilog2`) and the grid divide is an exact
+    power-of-two multiply. Zero maps to exponent <= -127, clamped to the
+    e=0 (step 0.5) grid, where ``rint(0) == 0``.
+    """
     ay = jnp.abs(y)
     # piecewise grid step: 0.5 for |y|<2, 1 for [2,4), 2 for [4,6]
-    e = jnp.clip(jnp.floor(jnp.log2(jnp.maximum(ay, 2.0**-10))), 0, EMAX_ELEM)
-    step = exp2i(e - 1)  # in units of value; code step = 2*step
-    q = jnp.rint(ay / step) * step  # ties-to-even on the local grid
+    e = jnp.clip(floor_ilog2(ay), 0, EMAX_ELEM)
+    # ties-to-even on the local grid; ay/step == ay * 2^(1-e) exactly
+    q = jnp.rint(ay * exp2i(1 - e)) * exp2i(e - 1)
     q = jnp.minimum(q, FP4_MAX)
     code = jnp.sign(y) * (2.0 * q)
     return code.astype(jnp.int8)
 
 
 def quantize(x: jax.Array, axis: int = -1) -> MX:
-    """Block-quantize ``x`` to MXFP4 along ``axis`` (padded to 32)."""
+    """Block-quantize ``x`` to MXFP4 along ``axis`` (padded to 32).
+
+    This *is* the quantize-to-codes entry point: the returned :class:`MX`
+    lives in the lossless INT5 code domain, so consumers that want codes
+    (the CIM datapath, the quantized-resident KV cache, packed serving
+    weights) take it directly with no dequantize round-trip;
+    :func:`fake_quant` composes it with :func:`dequantize` for value-domain
+    consumers.
+
+    The shared exponent is extracted from the IEEE-754 exponent field of
+    the block amax (exact ``floor(log2)``) — no transcendentals. Note
+    ``jnp.log2`` is *not* correctly rounded at inputs one ulp below a
+    power of two (it rounds up, skipping the OCP clamp-at-6 there); this
+    implementation is the exact OCP MX rule everywhere. Inputs on the
+    bf16 grid — all model activations/weights here — cannot land in that
+    one-ulp window, so the two rules are bitwise identical on model data.
+    """
     x = jnp.moveaxis(x, axis, -1) if axis not in (-1, x.ndim - 1) else x
     x = _pad_last(x.astype(jnp.float32))
     shp = x.shape
     xb = x.reshape(shp[:-1] + (shp[-1] // BLOCK, BLOCK))
-    amax = jnp.max(jnp.abs(xb), axis=-1)
-    # OCP MX: shared_exp = floor(log2(max)) - emax_elem; zero block -> emin
-    e = jnp.floor(jnp.log2(jnp.where(amax > 0, amax, 1.0))) - EMAX_ELEM
-    e = jnp.where(amax > 0, e, E8M0_MIN)
-    e = jnp.clip(e, E8M0_MIN, E8M0_MAX)
-    codes = quantize_e2m1(xb * exp2i(-e)[..., None])
-    return MX(codes.reshape(shp), e.astype(jnp.int8))
+    code_mag, ebf = _quant_scaled(xb)
+    codes = jnp.where(xb < 0, -code_mag, code_mag).astype(jnp.int8)
+    return MX(codes.reshape(shp), (ebf[..., 0] - 129).astype(jnp.int8))
+
+
+def quantize_axis(x: jax.Array, axis: int) -> MX:
+    """Code-domain :func:`quantize` along an arbitrary axis: the quantized
+    axis is *moved to the end* of both ``codes`` and ``exps`` (callers that
+    keep resident codes want the block axis last — e.g. the KV cache's
+    per-key-block V codes)."""
+    if axis in (-1, x.ndim - 1):
+        return quantize(x)
+    return quantize(jnp.moveaxis(x, axis, -1))
 
 
 def dequantize(mx: MX, out_len: int | None = None, dtype=jnp.float32) -> jax.Array:
@@ -153,12 +228,22 @@ def exps_from_biased(b: jax.Array) -> jax.Array:
 
 # ------------------------------------------------------------- fake quant
 
+def _bf16_pow2(field: jax.Array) -> jax.Array:
+    """bf16 with exponent *field* ``field`` (int32 in [0, 255]) — bf16
+    shares IEEE-754's 8-bit exponent layout at bit 7."""
+    return jax.lax.bitcast_convert_type(
+        (field << 7).astype(jnp.uint16), jnp.bfloat16
+    )
+
+
 @jax.custom_vjp
 def fake_quant(x: jax.Array) -> jax.Array:
     """Quantize-dequantize along the last axis with a straight-through
-    estimator (QAT-style). Shape is preserved (pad/unpad internally)."""
-    k = x.shape[-1]
-    return dequantize(quantize(x), out_len=k, dtype=x.dtype)
+    estimator (QAT-style). Shape is preserved (pad/unpad internally).
+    Bitwise ``dequantize(quantize(x))`` without the int8 code round-trip;
+    bf16 inputs run the chain natively in bf16 (see
+    :func:`_fake_quant_impl`)."""
+    return _fake_quant_impl(x, x.ndim - 1)
 
 
 def _fq_fwd(x):
@@ -172,11 +257,72 @@ def _fq_bwd(_, g):
 fake_quant.defvjp(_fq_fwd, _fq_bwd)
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
 def fake_quant_axis(x: jax.Array, axis: int) -> jax.Array:
-    if axis in (-1, x.ndim - 1):
-        return fake_quant(x)
-    xm = jnp.moveaxis(x, axis, -1)
-    return jnp.moveaxis(fake_quant(xm), -1, axis)
+    """:func:`fake_quant` along an arbitrary axis (STE gradient)."""
+    return _fake_quant_impl(x, axis)
+
+
+def _fake_quant_impl(x: jax.Array, axis: int) -> jax.Array:
+    """The one MXFP4 quantize-dequantize chain, computed *in layout*: the
+    quantized axis reshapes in place to (nb, 32) and everything broadcasts
+    over it — no moveaxis transposes, bitwise the moved-axis composition
+    (identical elements, blocks and ops; reductions are order-free).
+
+    bf16 inputs run natively in bf16: every E2M1 grid value, tie point and
+    power-of-two scale is exactly bf16-representable (bf16 shares the
+    8-bit IEEE exponent layout), so the decisions — and the values, both
+    paths flushing the sub-2^-126 scale window to zero on CPU — are
+    bitwise ``chain(x.astype(f32)).astype(bf16)`` without the f32
+    round-trip that doubled the SDPA operand traffic."""
+    a = axis % x.ndim
+    k = x.shape[a]
+    rem = (-k) % BLOCK
+    bf16 = x.dtype == jnp.bfloat16  # bf16-native (see _fake_quant_bf16)
+    xf = x if bf16 else x.astype(jnp.float32)
+    if rem:
+        pad = [(0, 0)] * x.ndim
+        pad[a] = (0, rem)
+        xf = jnp.pad(xf, pad)
+    shp = xf.shape
+    xb = xf.reshape(shp[:a] + ((k + rem) // BLOCK, BLOCK) + shp[a + 1:])
+
+    def field(t):  # biased IEEE exponent field (bf16 and f32 share it)
+        if bf16:
+            b = jax.lax.bitcast_convert_type(t, jnp.uint16).astype(jnp.int32)
+            return (b >> 7) & 0xFF
+        return (jax.lax.bitcast_convert_type(t, jnp.int32) >> 23) & 0xFF
+
+    def pow2(f):  # value with exponent field f (int32)
+        if bf16:
+            return _bf16_pow2(f)
+        return jax.lax.bitcast_convert_type(f << 23, jnp.float32)
+
+    ax = jnp.abs(xb)
+    amax = jnp.max(ax, axis=a + 1, keepdims=True)
+    ebf = jnp.clip(field(amax), 2, 254)
+    y = ax * pow2(256 - ebf)
+    e = jnp.clip(field(y) - 127, 0, EMAX_ELEM)
+    q = jnp.rint(y * pow2(128 - e))
+    q = q * pow2(126 + e)
+    q = jnp.minimum(q, jnp.asarray(FP4_MAX, xb.dtype))
+    scale = _bf16_pow2(ebf - 2) if bf16 else exp2i(ebf - 129)
+    v = jnp.where(xb < 0, -q, q) * scale  # q * 2^e_shared
+    v = v.reshape(shp)
+    if rem:
+        v = jax.lax.slice_in_dim(v, 0, k, axis=a)
+    return v.astype(x.dtype)
+
+
+def _fqa_fwd(x, axis):
+    return fake_quant_axis(x, axis), None
+
+
+def _fqa_bwd(axis, _, g):
+    return (g,)
+
+
+fake_quant_axis.defvjp(_fqa_fwd, _fqa_bwd)
 
 
 # ------------------------------------------------------------ bf16 helper

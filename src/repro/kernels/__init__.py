@@ -1,3 +1,17 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+
+from __future__ import annotations
+
+import jax
+
+
+def default_interpret() -> bool:
+    """Platform-derived Pallas ``interpret`` default: compiled lowering on
+    TPU (so a TPU run never silently interprets), the interpreter
+    everywhere else — the kernels here are Mosaic/TPU kernels
+    (``pltpu.VMEM`` scratch), so CPU *and* GPU backends can only run them
+    interpreted. Every kernel wrapper and ``RunCtx`` resolves an unset
+    ``interpret`` through this."""
+    return jax.default_backend() != "tpu"

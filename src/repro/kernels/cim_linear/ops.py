@@ -1,5 +1,6 @@
-"""Jitted wrapper: quantize activations to the INT5 code domain and run
-the CIM kernel against resident MXFP4 weights + Row-Hist calibration."""
+"""Jitted wrapper for the fused CIM kernel: raw activations stream in
+(the activation quantize runs *inside* the kernel tile — codes/exps never
+round-trip HBM) against resident MXFP4 weights + Row-Hist calibration."""
 
 from __future__ import annotations
 
@@ -9,6 +10,7 @@ import jax.numpy as jnp
 from repro.core import cim as cimlib
 from repro.core import mx as mxlib
 from repro.kernels.cim_linear.kernel import cim_linear_kernel
+from repro.kernels.mxfp4_matmul.ops import _round_up, pick_bm
 
 
 def cim_linear(
@@ -17,34 +19,32 @@ def cim_linear(
     calib: cimlib.LayerCalib,
     *,
     cfg: cimlib.CIMConfig | None = None,
-    interpret: bool = True,
+    interpret: bool | None = None,  # None -> platform default
 ) -> jax.Array:
     """x [..., K] float -> [..., N] f32 through the analog CIM kernel."""
     cfg = cfg or cimlib.CIMConfig()
     k = w.codes.shape[0]
-    lead = x.shape[:-1]
-    xq = mxlib.quantize(x.reshape(-1, x.shape[-1])[..., :k])
-    m = xq.codes.shape[0]
-    bm = 128
-    pm = (-m) % min(bm, max(m, 1))
-    xc, xe = xq.codes, xq.exps
-    if pm:
-        xc = jnp.pad(xc, ((0, pm), (0, 0)))
-        xe = jnp.pad(xe, ((0, pm), (0, 0)))
-    bm = min(bm, xc.shape[0])
-    while xc.shape[0] % bm:
-        bm //= 2
-    bn = 128
     n = w.codes.shape[1]
+    lead = x.shape[:-1]
+    xm = x.reshape(-1, x.shape[-1])[..., :k].astype(jnp.float32)
+    m = xm.shape[0]
+    bm = pick_bm(m)  # pad M up to the tile, never shrink toward divisors
+    pm = _round_up(m, bm) - m
+    if pm:
+        xm = jnp.pad(xm, ((0, pm), (0, 0)))
+    bn, bk = 128, 128
     bn = min(bn, n)
     while n % bn:
         bn //= 2
+    bk = min(bk, k)
+    while k % bk or bk % 32:
+        bk //= 2
     cal = jnp.array(
         [[jnp.asarray(calib.e_n, jnp.float32), calib.adc_fs]], jnp.float32
     )
     out = cim_linear_kernel(
-        xc, xe, w.codes, w.exps, cal,
-        bm=bm, bn=bn, cm=cfg.cm_bits, adc_bits=cfg.adc_bits,
+        xm, w.codes, w.exps, cal,
+        bm=bm, bn=bn, bk=max(bk, 32), cm=cfg.cm_bits, adc_bits=cfg.adc_bits,
         two_pass=cfg.two_pass, interpret=interpret,
     )
     if pm:

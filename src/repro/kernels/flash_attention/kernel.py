@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import default_interpret
+
 NEG_INF = -1e30
 
 
@@ -96,8 +98,10 @@ def flash_attention_kernel(
     causal: bool = True,
     window: int = 0,
     q_offset: int = 0,  # absolute position of q[0] (decode/prefill chunks)
-    interpret: bool = True,
+    interpret: bool | None = None,  # None -> platform default
 ):
+    if interpret is None:
+        interpret = default_interpret()
     bh, sq, d = q.shape
     bkv, sk, _ = k.shape
     assert bh == bkv * groups

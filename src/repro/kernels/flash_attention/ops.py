@@ -16,7 +16,7 @@ def flash_attention(
     causal: bool = True,
     window: int = 0,
     q_offset: int = 0,
-    interpret: bool = True,
+    interpret: bool | None = None,  # None -> platform default
 ) -> jax.Array:
     b, sq, h, d = q.shape
     _, sk, hkv, _ = k.shape

@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import default_interpret
+
 
 def _decode_tile(codes_u8: jax.Array, exps_u8: jax.Array) -> jax.Array:
     """[bk//2, bn] packed nibbles + [bk//32, bn] biased exps -> f32 [bk, bn].
@@ -73,8 +75,10 @@ def mxfp4_matmul_kernel(
     bn: int = 128,
     bk: int = 128,
     out_dtype=jnp.bfloat16,
-    interpret: bool = True,
+    interpret: bool | None = None,  # None -> platform default
 ):
+    if interpret is None:
+        interpret = default_interpret()
     m, k = x.shape
     n = codes.shape[1]
     assert codes.shape == (k // 2, n) and exps.shape == (k // 32, n)

@@ -10,13 +10,25 @@ import jax.numpy as jnp
 from repro.kernels.mxfp4_matmul.kernel import mxfp4_matmul_kernel
 
 
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def pick_bm(m: int, bm: int = 128) -> int:
+    """M tile: never shrink below hardware alignment — small/odd M *pads
+    up* to the tile instead (ViT's M=197 pads to 2x128, a tiny M=8 pads
+    to one 16-row tile). Shrinking toward M's divisors produced degenerate
+    tiles (e.g. bm=6) that cannot lower on TPU."""
+    return min(bm, _round_up(max(m, 1), 16))
+
+
 def mxfp4_matmul(
     x: jax.Array,
     codes: jax.Array,
     exps: jax.Array,
     *,
     block: tuple[int, int, int] = (128, 128, 128),
-    interpret: bool = True,
+    interpret: bool | None = None,  # None -> platform default
 ) -> jax.Array:
     """x [..., K] @ dequant(codes [K//2, N], exps [K//32, N]) -> [..., N]."""
     lead = x.shape[:-1]
@@ -25,15 +37,14 @@ def mxfp4_matmul(
     xm = x.reshape(-1, k)
     m = xm.shape[0]
     bm, bn, bk = block
-    pm = (-m) % min(bm, max(m, 1))
+    bm = pick_bm(m, bm)
+    pm = _round_up(m, bm) - m
     if pm:
         xm = jnp.pad(xm, ((0, pm), (0, 0)))
-    # shrink blocks to fit small shapes
-    bm = min(bm, xm.shape[0])
+    # N/K tiles shrink to divisors (padding would copy the resident packed
+    # weights every call); model dims are 128-multiples on TPU runs.
     bn = min(bn, n)
     bk = min(bk, k)
-    while xm.shape[0] % bm:
-        bm //= 2
     while n % bn:
         bn //= 2
     while k % bk or bk % 32:

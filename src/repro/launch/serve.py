@@ -42,8 +42,9 @@ def build_backend(args, cfg, params, batches=None, forward_fn=None,
     path passes synthetic images through ``vit.forward``).
     """
     shd = ShardingCtx()
-    kw = dict(shd=shd, dense_attn_max=256, impl=args.impl,
-              interpret=args.interpret)
+    kw = dict(shd=shd, dense_attn_max=256, impl=args.impl)
+    if getattr(args, "interpret", None) is not None:
+        kw["interpret"] = args.interpret  # else: platform default
     if args.backend == "float":
         return params, RunCtx(**kw)
     if args.backend == "mxfp4":
@@ -195,12 +196,14 @@ def main():
     ap.add_argument("--cim-min-n", type=int, default=32)
     ap.add_argument("--adc-bits", type=int, default=10)
     ap.add_argument("--cm-bits", type=int, default=3)
-    ap.add_argument("--impl", default="jnp", choices=("jnp", "pallas"),
-                    help="pure-jnp reference or Pallas kernels")
-    ap.add_argument("--no-interpret", dest="interpret", action="store_false",
-                    default=True,
-                    help="compile Pallas kernels instead of interpreting "
-                         "(real TPU runs; requires --impl pallas)")
+    ap.add_argument("--impl", default="auto",
+                    choices=("auto", "jnp", "pallas"),
+                    help="linear engine: auto = compiled Pallas on real "
+                         "accelerators, jnp reference on CPU")
+    ap.add_argument("--interpret", default=None,
+                    type=lambda s: s.lower() in ("1", "true", "yes"),
+                    help="force the Pallas interpret flag (default: "
+                         "platform-derived — interpret only on CPU)")
     ap.add_argument("--serve-trace", action="store_true",
                     help="continuous-batching engine demo: staggered "
                          "requests + FWS pipeline occupancy report")

@@ -315,9 +315,11 @@ def make_paged_decode_step(
     pstruct, specs = param_structs(cfg, serve_quant=quant == "mxfp4_wonly")
     p_shard = shd.resolve_with_divisibility(specs, pstruct, ctx.shd, mesh)
 
-    cspecs = lm.cache_specs(cfg)
+    mx_dig = ctx.hybrid_digital_sdpa  # quantized-resident pool for cim
+    cspecs = lm.cache_specs(cfg, mx_digital=mx_dig)
     pool_struct = jax.eval_shape(
-        lambda: lm.init_cache(cfg, num_slots + lanes, shape.seq)
+        lambda: lm.init_cache(cfg, num_slots + lanes, shape.seq,
+                              mx_digital=mx_dig)
     )
     pool_shard = shd.resolve_with_divisibility(
         cspecs, pool_struct, ctx.shd, mesh

@@ -102,11 +102,16 @@ def _mask(q_pos, k_pos, causal: bool, window: int):
 # dense, flash and decode paths so the hybrid numerics stay in one place.
 
 def _mx_qk(q, k):
-    """Quantize Q/K along the head_dim contraction (last axis)."""
-    return (
-        mxlib.fake_quant(q.astype(jnp.float32)),
-        mxlib.fake_quant(k.astype(jnp.float32)),
-    )
+    """Quantize Q/K along the head_dim contraction (last axis). bf16
+    inputs run the bf16-native chain (same quantize decisions — the input
+    is already bf16 — without a f32 round-trip)."""
+    return _mx_fq(q), _mx_fq(k)
+
+
+def _mx_fq(t):
+    if t.dtype == jnp.bfloat16:
+        return mxlib.fake_quant(t)
+    return mxlib.fake_quant(t.astype(jnp.float32))
 
 
 def _mx_score_round(s):
@@ -120,10 +125,92 @@ def _mx_pv(p, v):
     of the *quantized* probabilities, i.e. the hardware normalizer block
     (same deferred-division semantics as ``core/digital.mx_attention`` and
     the flash path), so quantizing P introduces no systematic row scale."""
+    p, den = _mx_p(p)
+    vq = (mxlib.fake_quant_axis(v, 1) if v.dtype == jnp.bfloat16
+          else mxlib.fake_quant_axis(v.astype(jnp.float32), 1))
+    return p, vq, den
+
+
+def _mx_p(p):
+    """Quantize P along the key axis + the hardware normalizer sum."""
     p = mxlib.fake_quant(p)
     den = jnp.sum(p, axis=-1, keepdims=True)
     den = jnp.where(den == 0.0, 1.0, den)
-    return p, mxlib.fake_quant_axis(v.astype(jnp.float32), 1), den
+    return p, den
+
+
+# Quantized-resident KV cache (digital-SDPA decode). The requant-per-step
+# reference quantizes the *entire* K cache along head_dim and the entire V
+# cache along the key axis on every decode step — O(cache_len) quantize
+# work per token. But K rows quantize per-row independently (a row's codes
+# only change when the row is rewritten) and V's shared-exponent 32-blocks
+# along the key axis only change when a write lands inside them; so the
+# cache can keep codes + exponents *resident* and re-quantize only the
+# written K row and the active V block per step — O(1) in cache length,
+# bitwise identical to the reference.
+#
+# Layouts: K codes [B, W, Hkv, Dh_pad] quantized along head_dim (exps
+# [B, W, Hkv, Dh_pad//32]); V codes [B, Hkv, Dh, W_pad] with the *key*
+# axis last (exps [B, Hkv, Dh, W_pad//32]) so the quantized axis is the
+# contiguous block axis in both.
+
+def _quant_cache_sizes(w: int, hd: int):
+    dpad = -(-hd // mxlib.BLOCK) * mxlib.BLOCK
+    wpad = -(-w // mxlib.BLOCK) * mxlib.BLOCK
+    return dpad, wpad
+
+
+def quant_cache_init(batch: int, w: int, n_kv: int, hd: int) -> dict:
+    """Quantized mirrors for a zero-initialized K/V cache: zero blocks
+    quantize to zero codes with the E8M0 floor exponent."""
+    dpad, wpad = _quant_cache_sizes(w, hd)
+    return {
+        "k_codes": jnp.zeros((batch, w, n_kv, dpad), jnp.int8),
+        "k_exps": jnp.full(
+            (batch, w, n_kv, dpad // mxlib.BLOCK), mxlib.E8M0_MIN, jnp.int8
+        ),
+        "v_codes": jnp.zeros((batch, n_kv, hd, wpad), jnp.int8),
+        "v_exps": jnp.full(
+            (batch, n_kv, hd, wpad // mxlib.BLOCK), mxlib.E8M0_MIN, jnp.int8
+        ),
+    }
+
+
+def _quant_cache_full(kw: jax.Array, vw: jax.Array) -> dict:
+    """Quantize a whole cache-shaped K/V pair (prefill-into-cache):
+    K per row along head_dim, V along the key axis in 32-blocks."""
+    kq = mxlib.quantize(kw.astype(jnp.float32))
+    vq = mxlib.quantize_axis(vw.astype(jnp.float32), 1)  # key axis last
+    return {"k_codes": kq.codes, "k_exps": kq.exps,
+            "v_codes": vq.codes, "v_exps": vq.exps}
+
+
+def _quant_cache_step(cache: dict, ck: jax.Array, cv: jax.Array,
+                      lanes: jax.Array, slot: jax.Array) -> dict:
+    """Per-step resident update: re-quantize the written K row and the
+    active 32-block of V (from the just-updated raw caches ``ck``/``cv``),
+    leaving every other block's codes untouched — they are bitwise what a
+    full requant would recompute."""
+    b, w = cv.shape[0], cv.shape[1]
+    kq = mxlib.quantize(ck[lanes, slot].astype(jnp.float32))  # [B, Hkv, *]
+    out = {
+        "k_codes": cache["k_codes"].at[lanes, slot].set(kq.codes),
+        "k_exps": cache["k_exps"].at[lanes, slot].set(kq.exps),
+    }
+    start = (slot // mxlib.BLOCK) * mxlib.BLOCK  # [B]
+    idx = start[:, None] + jnp.arange(mxlib.BLOCK)  # [B, 32]
+    blk = jnp.take_along_axis(
+        cv, jnp.minimum(idx, w - 1)[:, :, None, None], axis=1
+    )
+    blk = jnp.where((idx < w)[:, :, None, None], blk, 0)  # partial end block
+    vq = mxlib.quantize_axis(blk.astype(jnp.float32), 1)  # [B, Hkv, Dh, 32]
+    out["v_codes"] = jax.vmap(
+        lambda c, u, st: jax.lax.dynamic_update_slice(c, u, (0, 0, st))
+    )(cache["v_codes"], vq.codes, start)
+    out["v_exps"] = cache["v_exps"].at[
+        lanes, :, :, slot // mxlib.BLOCK
+    ].set(vq.exps[..., 0])
+    return out
 
 
 def _dense_attn(
@@ -140,6 +227,10 @@ def _dense_attn(
     """
     if mx_digital:
         q, k = _mx_qk(q, k)
+        # MXFP4 values are exactly bf16-representable (4-bit mantissa),
+        # so the systolic operands move as bf16 with f32 accumulation —
+        # half the GEMM traffic, bitwise the same scores
+        q, k = q.astype(jnp.bfloat16), k.astype(jnp.bfloat16)
     s = jnp.einsum(
         "bqhgd,bkhd->bhgqk", q, k, preferred_element_type=jnp.float32
     ) * cfg.scale
@@ -153,7 +244,14 @@ def _dense_attn(
     p = jnp.where(jnp.isfinite(s).any(-1, keepdims=True), p, 0.0)
     if mx_digital:
         p, v, den = _mx_pv(p, v)
-        o = jnp.einsum("bhgqk,bkhd->bqhgd", p / den, v)
+        o = jnp.einsum(
+            "bhgqk,bkhd->bqhgd", p.astype(jnp.bfloat16),
+            v.astype(jnp.bfloat16), preferred_element_type=jnp.float32,
+        )
+        # deferred division by the quantized-P sum *after* the SV array —
+        # the hardware normalizer block (core/digital.mx_attention and the
+        # flash path do the same), and O(q*d) divides instead of O(q*k)
+        o = o / jnp.moveaxis(den, -2, 1)
         return o.astype(jnp.bfloat16)
     return jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v)
 
@@ -243,7 +341,8 @@ def _flash_attn(q, k, v, q_pos, k_pos, cfg: AttnStatic, ctx: RunCtx,
     return out[:, :sq]
 
 
-def _qkv(ctx: RunCtx, cfg: AttnStatic, p: dict, x: jax.Array, positions):
+def _qkv(ctx: RunCtx, cfg: AttnStatic, p: dict, x: jax.Array, positions,
+         rope_tables=None):
     b, s, _ = x.shape
     h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
     q = linear_apply(ctx, p["wq"], x, name="wq").reshape(b, s, h, hd)
@@ -259,8 +358,10 @@ def _qkv(ctx: RunCtx, cfg: AttnStatic, p: dict, x: jax.Array, positions):
             q = ropelib.apply_mrope(q, mp, cfg.rope_theta, sec)
             k = ropelib.apply_mrope(k, mp, cfg.rope_theta, sec)
         else:
-            q = ropelib.apply_rope(q, positions, cfg.rope_theta)
-            k = ropelib.apply_rope(k, positions, cfg.rope_theta)
+            q = ropelib.apply_rope(q, positions, cfg.rope_theta,
+                                   tables=rope_tables)
+            k = ropelib.apply_rope(k, positions, cfg.rope_theta,
+                                   tables=rope_tables)
     return q, k, v
 
 
@@ -272,12 +373,14 @@ def attn_apply(
     positions: jax.Array,
     cache: dict | None = None,
     pos: jax.Array | None = None,
+    rope_tables=None,
 ):
     """Pre-norm attention sublayer with residual.
 
     Train/prefill: ``cache=None``, positions [B, S].
     Decode: ``cache={'k','v'}`` ring/linear buffers, ``pos`` scalar int32
     (current length; the new token is written at slot pos % W).
+    ``rope_tables`` shares precomputed RoPE cos/sin across layers.
     Returns (y, new_cache).
     """
     b, s, d = x.shape
@@ -285,7 +388,7 @@ def attn_apply(
     g = h // kv
     mx_dig = ctx.hybrid_digital_sdpa
     xn = norm_apply(cfg.norm, p["ln"], x)
-    q, k, v = _qkv(ctx, cfg, p, xn, positions)
+    q, k, v = _qkv(ctx, cfg, p, xn, positions, rope_tables=rope_tables)
     if s > 1:
         # zero K/V at KV_PAD positions (fixed-shape padded serving
         # prefill). The mask already excludes them from scores, but the
@@ -312,6 +415,12 @@ def attn_apply(
                 vw = jnp.roll(vw, roll, axis=1)
         new_cache = {"k": kw.astype(cache["k"].dtype),
                      "v": vw.astype(cache["v"].dtype)}
+        if "k_codes" in cache:
+            # quantized-resident pool: fill the code mirrors from the
+            # cache-dtype-cast pages (what requant-per-step would see)
+            new_cache.update(
+                _quant_cache_full(new_cache["k"], new_cache["v"])
+            )
         k = ctx.act(k, "batch", "kv_seq", "kv_heads", "head_dim")
         v = ctx.act(v, "batch", "kv_seq", "kv_heads", "head_dim")
         if s <= ctx.dense_attn_max:
@@ -331,11 +440,24 @@ def attn_apply(
         ck = cache["k"].at[lanes, slot].set(k[:, 0].astype(cache["k"].dtype))
         cv = cache["v"].at[lanes, slot].set(v[:, 0].astype(cache["v"].dtype))
         new_cache = {"k": ck, "v": cv}
+        resident = "k_codes" in cache
+        if resident:
+            new_cache.update(_quant_cache_step(cache, ck, cv, lanes, slot))
         idx = jnp.arange(w)
         valid = (idx[None, :] <= pos_b[:, None]) | (pos_b[:, None] >= w)
         qd, kd = q, ck
         if mx_dig:  # digital MXFP4 systolic SDPA for the hybrid backend
-            qd, kd = _mx_qk(q, ck)
+            qd = _mx_fq(q)
+            if resident:  # O(1) per-step quantization: read K codes back
+                kd = mxlib.dequantize(
+                    mxlib.MX(new_cache["k_codes"], new_cache["k_exps"]),
+                    out_len=hd,
+                )
+            else:  # requant-per-step reference: O(cache_len) quantize
+                kd = _mx_fq(ck)
+            # exact bf16 carriage of the quantized operands (see
+            # _dense_attn)
+            qd, kd = qd.astype(jnp.bfloat16), kd.astype(jnp.bfloat16)
         sc = jnp.einsum(
             "bqhgd,bkhd->bhgqk", qd, kd, preferred_element_type=jnp.float32
         ) * cfg.scale
@@ -343,8 +465,22 @@ def attn_apply(
             sc = _mx_score_round(sc)
         sc = jnp.where(valid[:, None, None, None, :], sc, -jnp.inf)
         if mx_dig:
-            pr, vd, den = _mx_pv(jax.nn.softmax(sc, axis=-1), cv)
-            o = jnp.einsum("bhgqk,bkhd->bqhgd", pr / den, vd).astype(cv.dtype)
+            pr, den = _mx_p(jax.nn.softmax(sc, axis=-1))
+            if resident:
+                vd = jnp.moveaxis(
+                    mxlib.dequantize(
+                        mxlib.MX(new_cache["v_codes"], new_cache["v_exps"]),
+                        out_len=w,
+                    ),
+                    -1, 1,
+                )
+            else:
+                vd = mxlib.fake_quant_axis(cv, 1)  # bf16-native chain
+            o = jnp.einsum(
+                "bhgqk,bkhd->bqhgd", pr.astype(jnp.bfloat16),
+                vd.astype(jnp.bfloat16), preferred_element_type=jnp.float32,
+            )
+            o = (o / jnp.moveaxis(den, -2, 1)).astype(cv.dtype)
         else:
             pr = jax.nn.softmax(sc, axis=-1).astype(cv.dtype)
             o = jnp.einsum("bhgqk,bkhd->bqhgd", pr, cv)
@@ -365,13 +501,31 @@ def attn_apply(
     return x + y.astype(x.dtype), new_cache
 
 
-def attn_cache_init(cfg: AttnStatic, batch: int, max_len: int, dtype=jnp.bfloat16):
+def attn_cache_init(cfg: AttnStatic, batch: int, max_len: int,
+                    dtype=jnp.bfloat16, mx_digital: bool = False):
+    """K/V decode cache; with ``mx_digital`` it additionally carries the
+    quantized-resident code mirrors for the digital-SDPA decode path."""
     w = min(cfg.window, max_len) if cfg.window > 0 else max_len
     shape = (batch, w, cfg.n_kv, cfg.head_dim)
-    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    cache = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if mx_digital:
+        cache.update(quant_cache_init(batch, w, cfg.n_kv, cfg.head_dim))
+    return cache
 
 
 ATTN_CACHE_SPECS = {
     "k": ("batch", "cache_seq", None, None),
     "v": ("batch", "cache_seq", None, None),
 }
+
+ATTN_QUANT_CACHE_SPECS = {
+    **ATTN_CACHE_SPECS,
+    "k_codes": ("batch", "cache_seq", None, None),
+    "k_exps": ("batch", "cache_seq", None, None),
+    "v_codes": ("batch", None, None, "cache_seq"),
+    "v_exps": ("batch", None, None, None),
+}
+
+
+def attn_cache_specs(mx_digital: bool = False) -> dict:
+    return ATTN_QUANT_CACHE_SPECS if mx_digital else ATTN_CACHE_SPECS

@@ -49,6 +49,29 @@ from repro.core import mx as mxlib
 
 # ----------------------------------------------------------- param packing
 
+def _pair_table() -> np.ndarray:
+    """256-entry byte -> uint32 table: low/high u16 halves hold the bf16
+    bit patterns of the two E2M1 *code* values (2 * fp4 in [-12, 12]) a
+    packed byte carries (even row in the low nibble). One gather + one
+    bitcast decodes a whole byte — the per-nibble shift/select chain was
+    the dominant cost of the jnp serving path on CPU."""
+    byte = np.arange(256)
+
+    def val(nib):
+        m = nib & 1
+        e = (nib >> 1) & 3
+        c = np.where(e == 0, m, (2 + m) << np.maximum(e - 1, 0))
+        return np.where((nib >> 3) & 1, -c, c).astype(np.float32)
+
+    def bf16_bits(v):  # round-to-nearest is exact for these integers
+        return (v.astype(">f4").view(">u4") >> 16).astype(np.uint32)
+
+    return bf16_bits(val(byte & 15)) | (bf16_bits(val(byte >> 4)) << 16)
+
+
+_PAIR_TABLE = _pair_table()
+
+
 def _dequant_packed(codes: jax.Array, exps: jax.Array) -> jax.Array:
     """packed uint8 codes [K//2, N] + biased exps [K//32, N] -> bf16 [K, N].
 
@@ -56,16 +79,19 @@ def _dequant_packed(codes: jax.Array, exps: jax.Array) -> jax.Array:
     bf16, so this is bit-identical to the f32 path while cutting the
     dequant intermediate traffic ~3x (decode is weight-read bound —
     EXPERIMENTS.md §Perf; the Pallas kernel removes even this by
-    expanding inside VMEM)."""
+    expanding inside VMEM). Each byte decodes through the u32 pair table
+    (:func:`_pair_table`) in one gather."""
     kp2, n = codes.shape[-2], codes.shape[-1]
     k = kp2 * 2
-    c = jnp.swapaxes(mxlib.unpack_codes(jnp.swapaxes(codes, -1, -2)), -1, -2)
+    pair = jnp.asarray(_PAIR_TABLE)[codes.astype(jnp.int32)]  # [..., K//2, N]
+    u16 = jax.lax.bitcast_convert_type(pair, jnp.uint16)  # [..., 2] LE: 0=lo
+    cb = jax.lax.bitcast_convert_type(u16, jnp.bfloat16)
+    cb = jnp.swapaxes(cb, -1, -2).reshape(codes.shape[:-2] + (k, n))
     scale = mxlib.exp2i(mxlib.exps_from_biased(exps) - 1).astype(
         jnp.bfloat16
     )  # 2^(e-1) == 0.5 * 2^e, exact
-    cb = c.reshape(c.shape[:-2] + (k // 32, 32, n)).astype(jnp.bfloat16)
-    w = cb * scale[..., :, None, :]
-    return w.reshape(c.shape[:-2] + (k, n))
+    w = cb.reshape(codes.shape[:-2] + (k // 32, 32, n)) * scale[..., :, None, :]
+    return w.reshape(codes.shape[:-2] + (k, n))
 
 
 def _quantize_packed(w: jax.Array) -> dict:
@@ -206,7 +232,7 @@ class _MXFP4WeightOnly(LinearBackend):
             # not yet converted (eval on a float tree): weight-only quant
             # happens at convert time, so this is the plain bf16 matmul
             return _REGISTRY["float_bf16"].forward(ctx, params, x)
-        if ctx.impl == "pallas":
+        if ctx.use_pallas:
             from repro.kernels.mxfp4_matmul import ops as mmops
 
             return mmops.mxfp4_matmul(
@@ -259,7 +285,7 @@ class _CIMAnalog(LinearBackend):
         cfg = cim_config(ctx)
         w = mxlib.MXW(params["codes"], params["exps"])
         calib = cimlib.LayerCalib(e_n=params["e_n"], adc_fs=params["adc_fs"])
-        if ctx.impl == "pallas":
+        if ctx.use_pallas:
             from repro.kernels.cim_linear import ops as cim_ops
 
             y = cim_ops.cim_linear(
@@ -302,6 +328,11 @@ class ActivationTap:
     tap is active on the context. Only static analog candidates are kept:
     2-D weights with a 32-aligned contraction dim and a wide-enough output
     dim. Rows are subsampled to ``max_rows`` per call to bound memory.
+
+    Captures stay *on device*: ``record`` only slices/casts (async under
+    the eager capture run — no ``jax.device_get`` host sync per linear per
+    batch mid-forward); the single host transfer happens when
+    ``calibrate_taps`` consumes the records.
     """
 
     min_n: int = 256
@@ -320,10 +351,10 @@ class ActivationTap:
         if not self.eligible(params):
             return
         k = params["w"].shape[0]
-        xf = np.asarray(jax.device_get(x), np.float32).reshape(-1, k)
+        xf = x.astype(jnp.float32).reshape(-1, k)
         if xf.shape[0] > self.max_rows:
             idx = np.linspace(0, xf.shape[0] - 1, self.max_rows).astype(int)
-            xf = xf[idx]
+            xf = jnp.take(xf, jnp.asarray(idx), axis=0)
         self.records.setdefault(path, []).append(xf)
         self.weights[path] = params["w"]
 
@@ -335,17 +366,20 @@ def calibrate_taps(
 ) -> dict[str, cimlib.LayerCalib]:
     """Offline Row-Hist calibration (paper §3.2.1) of every tapped linear:
     per-layer target exponent E_N + ADC full scale from the recorded
-    representative activations. Pass a dict as ``wq_cache`` to receive the
-    quantized MXW per path, so conversion skips re-quantizing."""
+    representative activations. The records arrive as device arrays (the
+    tap never host-syncs mid-forward) and feed the jitted calibration
+    passes directly — no host round-trip at all. Pass a dict as
+    ``wq_cache`` to receive the quantized MXW per path, so conversion
+    skips re-quantizing."""
     cfg = cfg or cimlib.CIMConfig()
     out = {}
     for path, xs in tap.records.items():
-        wq = mxlib.quantize_w(jnp.asarray(tap.weights[path], jnp.float32))
+        wq = mxlib.quantize_w(
+            jnp.asarray(tap.weights[path]).astype(jnp.float32)
+        )
         if wq_cache is not None:
             wq_cache[path] = wq
-        out[path] = cimlib.calibrate_rowhist(
-            [jnp.asarray(x) for x in xs], wq, cfg
-        )
+        out[path] = cimlib.calibrate_rowhist(list(xs), wq, cfg)
     return out
 
 

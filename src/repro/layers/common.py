@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import kernels as kernels_lib
 from repro.core import mx as mxlib
 from repro.layers import backends as backends_lib
 from repro.layers.backends import (  # noqa: F401  (re-exported API)
@@ -106,15 +107,21 @@ class RunCtx:
     ``quant`` names a linear-execution backend from
     ``repro.layers.backends`` (aliases: ``none -> float_bf16``,
     ``cim -> cim_analog``); unknown names raise ``ValueError`` at the first
-    linear. ``impl`` selects the pure-jnp reference or the Pallas kernels;
-    ``interpret`` is threaded into every ``pallas_call`` (True = CPU
-    interpreter, False = compiled TPU lowering).
+    linear. ``impl`` selects the linear execution engine: ``"auto"`` (the
+    default) runs compiled Pallas kernels on real accelerators and the
+    pure-jnp reference on CPU (see :meth:`use_pallas`); ``"jnp"`` /
+    ``"pallas"`` force one side. ``interpret`` is threaded into every
+    ``pallas_call``; its default is platform-derived (True only on CPU,
+    where there is no Mosaic lowering) so TPU runs never silently
+    interpret.
     """
 
     shd: ShardingCtx
     quant: str = "none"  # backend name: none|mxfp4_ste|mxfp4_ste_prequant|mxfp4_wonly|cim
-    impl: str = "jnp"  # jnp | pallas
-    interpret: bool = True  # Pallas interpret mode (False on real TPUs)
+    impl: str = "auto"  # auto | jnp | pallas
+    interpret: bool = dataclasses.field(
+        default_factory=kernels_lib.default_interpret
+    )  # Pallas interpret mode (platform default: True only on CPU)
     decode: bool = False
     attn_chunk: int = 1024  # KV chunk for the online-softmax path
     q_chunk: int = 2048
@@ -141,6 +148,16 @@ class RunCtx:
         return dataclasses.replace(
             self, scope=f"{self.scope}/{name}" if self.scope else name
         )
+
+    @property
+    def use_pallas(self) -> bool:
+        """Linear-engine dispatch: ``impl="auto"`` selects compiled Pallas
+        on TPU and the jnp reference elsewhere (the kernels are
+        Mosaic/TPU kernels — on CPU/GPU they would only run under the
+        slow interpreter)."""
+        if self.impl == "auto":
+            return jax.default_backend() == "tpu"
+        return self.impl == "pallas"
 
     @property
     def hybrid_digital_sdpa(self) -> bool:

@@ -12,19 +12,35 @@ def _rope_angles(positions: jax.Array, dim: int, theta: float) -> jax.Array:
     return positions.astype(jnp.float32)[..., None] * inv
 
 
+def rope_tables(
+    positions: jax.Array, dim: int, theta: float = 1e4
+) -> tuple[jax.Array, jax.Array]:
+    """(cos, sin) f32 [B, S, 1, dim//2] for :func:`apply_rope`'s
+    ``tables``. The tables depend only on positions, so callers compute
+    them once per forward and share them across q/k and scanned layers —
+    otherwise XLA re-materializes the sin/cos transcendentals into every
+    consumer fusion (measured as the top cost of the quantized forward)."""
+    ang = _rope_angles(positions, dim, theta)  # [B, S, dim//2]
+    return jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+
+
 def apply_rope(
     x: jax.Array,
     positions: jax.Array,
     theta: float = 1e4,
     rotary_dim: int | None = None,
+    tables: tuple[jax.Array, jax.Array] | None = None,
 ) -> jax.Array:
     """x: [B, S, H, D]; positions: [B, S] int32. Rotates the first
-    ``rotary_dim`` features (half-split convention)."""
+    ``rotary_dim`` features (half-split convention). ``tables`` passes
+    precomputed :func:`rope_tables` (f32; cast here, so the values are
+    bitwise the inline computation)."""
     d = x.shape[-1]
     rd = d if rotary_dim is None else rotary_dim
-    ang = _rope_angles(positions, rd, theta)  # [B, S, rd//2]
-    cos = jnp.cos(ang)[..., None, :].astype(x.dtype)  # [B, S, 1, rd//2]
-    sin = jnp.sin(ang)[..., None, :].astype(x.dtype)
+    if tables is None:
+        tables = rope_tables(positions, rd, theta)
+    cos = tables[0].astype(x.dtype)  # [B, S, 1, rd//2]
+    sin = tables[1].astype(x.dtype)
     x1, x2 = x[..., : rd // 2], x[..., rd // 2 : rd]
     rot = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
     return jnp.concatenate([rot, x[..., rd:]], axis=-1) if rd < d else rot

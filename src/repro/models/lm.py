@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 from repro.layers import attention as attn_mod
 from repro.layers import ffn as ffn_mod
+from repro.layers import rope as ropelib
 from repro.layers import moe as moe_mod
 from repro.layers import ssm as ssm_mod
 from repro.layers import xlstm as xl_mod
@@ -261,9 +262,11 @@ def init_model(key, cfg: ArchConfig):
 
 # --------------------------------------------------------------- caches
 
-def _block_cache(cfg: ArchConfig, seg: Segment, batch: int, max_len: int):
+def _block_cache(cfg: ArchConfig, seg: Segment, batch: int, max_len: int,
+                 mx_digital: bool = False):
     if seg.kind in ("attn", "moe_attn", "zshared"):
-        return attn_mod.attn_cache_init(seg.attn, batch, max_len)
+        return attn_mod.attn_cache_init(seg.attn, batch, max_len,
+                                        mx_digital=mx_digital)
     if seg.kind == "mamba":
         return ssm_mod.mamba_cache_init(seg.mamba, batch)
     if seg.kind == "mlstm":
@@ -273,9 +276,9 @@ def _block_cache(cfg: ArchConfig, seg: Segment, batch: int, max_len: int):
     raise ValueError(seg.kind)
 
 
-def _block_cache_specs(seg: Segment):
+def _block_cache_specs(seg: Segment, mx_digital: bool = False):
     if seg.kind in ("attn", "moe_attn", "zshared"):
-        return attn_mod.ATTN_CACHE_SPECS
+        return attn_mod.attn_cache_specs(mx_digital)
     if seg.kind == "mamba":
         return ssm_mod.MAMBA_CACHE_SPECS
     if seg.kind == "mlstm":
@@ -285,21 +288,27 @@ def _block_cache_specs(seg: Segment):
     raise ValueError(seg.kind)
 
 
-def init_cache(cfg: ArchConfig, batch: int, max_len: int):
-    """Decode caches per segment (stacked along the layer axis for runs)."""
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               mx_digital: bool = False):
+    """Decode caches per segment (stacked along the layer axis for runs).
+
+    ``mx_digital`` adds the quantized-resident K/V code mirrors that make
+    per-token decode quantization O(1) in cache length on the hybrid /
+    fully-digital MXFP4 SDPA path (bitwise identical to the
+    requant-per-step reference a plain cache falls back to)."""
     caches = []
     for seg in build_segments(cfg):
-        c = _block_cache(cfg, seg, batch, max_len)
+        c = _block_cache(cfg, seg, batch, max_len, mx_digital=mx_digital)
         if seg.n > 1:
             c = jax.tree.map(lambda x: jnp.broadcast_to(x, (seg.n,) + x.shape), c)
         caches.append(c)
     return caches
 
 
-def cache_specs(cfg: ArchConfig):
+def cache_specs(cfg: ArchConfig, mx_digital: bool = False):
     out = []
     for seg in build_segments(cfg):
-        s = dict(_block_cache_specs(seg))
+        s = dict(_block_cache_specs(seg, mx_digital=mx_digital))
         if seg.n > 1:
             s = {k: ("layers",) + v for k, v in s.items()}
         out.append(s)
@@ -308,10 +317,12 @@ def cache_specs(cfg: ArchConfig):
 
 # -------------------------------------------------------------- forward
 
-def _block_apply(ctx, cfg, seg: Segment, p, x, positions, cache, pos, shared, x0):
+def _block_apply(ctx, cfg, seg: Segment, p, x, positions, cache, pos, shared,
+                 x0, rope_tables=None):
     if seg.kind in ("attn", "moe_attn"):
         x, nc = attn_mod.attn_apply(ctx.scoped("attn"), seg.attn, p["attn"],
-                                    x, positions, cache, pos)
+                                    x, positions, cache, pos,
+                                    rope_tables=rope_tables)
         if seg.kind == "moe_attn":
             x = moe_mod.moe_apply(
                 ctx.scoped("moe"), cfg.ffn_kind, cfg.norm, p["moe"], x,
@@ -337,7 +348,8 @@ def _block_apply(ctx, cfg, seg: Segment, p, x, positions, cache, pos, shared, x0
         h = linear_apply(sctx, shared["w_in"],
                          jnp.concatenate([x, x0], axis=-1), name="w_in")
         h, nc = attn_mod.attn_apply(sctx.scoped("attn"), seg.attn,
-                                    shared["attn"], h, positions, cache, pos)
+                                    shared["attn"], h, positions, cache, pos,
+                                    rope_tables=rope_tables)
         h = ffn_mod.ffn_apply(sctx.scoped("ffn"), cfg.ffn_kind, cfg.norm,
                               shared["ffn"], h)
         return x + linear_apply(sctx, shared["w_out"], h,
@@ -346,9 +358,21 @@ def _block_apply(ctx, cfg, seg: Segment, p, x, positions, cache, pos, shared, x0
 
 
 def _run_segment(ctx, cfg, seg: Segment, p, x, positions, cache, pos, shared, x0):
+    # RoPE tables depend only on positions: compute them once per segment
+    # and share across q/k and every scanned layer (the scan body closes
+    # over them) instead of re-deriving sin/cos per layer per projection
+    rope_tables = None
+    if (
+        seg.attn is not None
+        and seg.attn.use_rope
+        and not seg.attn.mrope
+    ):
+        rope_tables = ropelib.rope_tables(
+            positions, seg.attn.head_dim, seg.attn.rope_theta
+        )
     if seg.n == 1 or seg.kind == "zshared":
         return _block_apply(ctx, cfg, seg, p, x, positions, cache, pos,
-                            shared, x0)
+                            shared, x0, rope_tables)
 
     if ctx.tap is not None or ctx.unroll_layers:
         # calibration capture (each per-layer activation records under its
@@ -359,7 +383,7 @@ def _run_segment(ctx, cfg, seg: Segment, p, x, positions, cache, pos, shared, x0
             pj = jax.tree.map(lambda a: a[j], p)
             cj = None if cache is None else jax.tree.map(lambda a: a[j], cache)
             x, nc = _block_apply(ctx.scoped(f"L{j}"), cfg, seg, pj, x,
-                                 positions, cj, pos, shared, x0)
+                                 positions, cj, pos, shared, x0, rope_tables)
             ncs.append(nc)
         nc = None if cache is None else jax.tree.map(
             lambda *xs: jnp.stack(xs), *ncs
@@ -372,7 +396,7 @@ def _run_segment(ctx, cfg, seg: Segment, p, x, positions, cache, pos, shared, x0
         else:
             pl, cl = xs
         y, nc = _block_apply(ctx, cfg, seg, pl, carry, positions, cl, pos,
-                             shared, x0)
+                             shared, x0, rope_tables)
         return y, nc
 
     if cfg.remat:

@@ -52,7 +52,10 @@ class Engine:
         self.cfg = cfg
         self.ctx = ctx
         self.ecfg = ecfg
-        self.kv = PagedKVCache(cfg, ecfg.num_slots, ecfg.lanes, ecfg.page_len)
+        # hybrid / fully-digital MXFP4 SDPA: the pool keeps K/V codes
+        # resident so decode quantization is O(1) in cache length
+        self.kv = PagedKVCache(cfg, ecfg.num_slots, ecfg.lanes, ecfg.page_len,
+                               mx_digital=ctx.hybrid_digital_sdpa)
         self.sched = Scheduler(ecfg.lanes, ecfg.policy)
         self.requests: dict[int, Request] = {}
         self.trace: list = []  # (kind, rids, n_tokens) per scheduled step
@@ -67,7 +70,8 @@ class Engine:
         specs = self.kv.specs
 
         def prefill(params, pool, ids, positions, row, last):
-            caches = lm.init_cache(cfg, 1, ecfg.page_len)
+            caches = lm.init_cache(cfg, 1, ecfg.page_len,
+                                   mx_digital=self.kv.mx_digital)
             hidden, caches = lm.forward(
                 params, cfg, ctx, {"ids": ids, "positions": positions},
                 caches=caches, return_hidden=True,

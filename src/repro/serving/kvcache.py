@@ -93,9 +93,15 @@ def scatter_rows(pool, specs, rows, values):
 
 
 class PagedKVCache:
-    """Fixed pool of KV pages + slot allocator for one served model."""
+    """Fixed pool of KV pages + slot allocator for one served model.
 
-    def __init__(self, cfg, num_slots: int, lanes: int, page_len: int):
+    ``mx_digital`` pools carry quantized-resident K/V code mirrors next to
+    the raw pages (see ``layers.attention``): decode re-quantizes only the
+    written K row and active V block per step instead of the whole page.
+    """
+
+    def __init__(self, cfg, num_slots: int, lanes: int, page_len: int,
+                 mx_digital: bool = False):
         for seg in lm.build_segments(cfg):
             if seg.kind not in ("attn", "moe_attn"):
                 raise NotImplementedError(
@@ -112,8 +118,10 @@ class PagedKVCache:
         self.num_slots = num_slots
         self.lanes = lanes
         self.page_len = page_len
-        self.specs = lm.cache_specs(cfg)
-        self.pool = lm.init_cache(cfg, num_slots + lanes, page_len)
+        self.mx_digital = mx_digital
+        self.specs = lm.cache_specs(cfg, mx_digital=mx_digital)
+        self.pool = lm.init_cache(cfg, num_slots + lanes, page_len,
+                                  mx_digital=mx_digital)
         self.allocator = SlotAllocator(num_slots)
 
     def scratch_row(self, lane: int) -> int:

@@ -1,0 +1,323 @@
+"""Fused quantized hot path invariants.
+
+Three claim families from the perf rework:
+
+- the bit-twiddle (IEEE-754 exponent-field) quantizer is *exactly* the
+  OCP MX rule — verified bitwise against a float64 correctly-rounded
+  floor(log2) reference across grid-boundary ties, one-ulp binade edges,
+  zero blocks and E8M0 clamp edges (``jnp.log2`` itself is not correctly
+  rounded there, which is why the reference is f64);
+- Pallas kernels match the jnp reference at odd, non-tile-aligned shapes
+  (ViT's M=197/145, non-multiple-of-128 N) through the pad-M-up wrappers;
+- the quantized-resident KV cache decodes bitwise identically to the
+  requant-per-step reference for both K and V, including ring wrap and
+  partial trailing V blocks, while doing O(1) quantize work per step.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as C
+from repro.core import cim as cimlib
+from repro.core import mx as mxlib
+from repro.kernels.cim_linear import ops as cim_ops
+from repro.kernels.mxfp4_matmul import ops as mm_ops
+from repro.kernels.mxfp4_matmul import ref as mm_ref
+from repro.layers import attention as attn_mod
+from repro.layers.common import RunCtx, ShardingCtx
+
+
+# --------------------------------------------- bit-twiddle quantizer ==
+
+
+def _quantize_ref_f64(x: np.ndarray):
+    """Correctly-rounded OCP MX reference: float64 floor(log2) for the
+    shared exponent and the local E2M1 binade, numpy rint (ties-to-even).
+    Subnormal f32 inputs are flushed to zero first — XLA CPU multiplies
+    flush them, and the jnp quantizer inherits that (pre-existing)
+    behavior; everything normal is exact."""
+    x = np.asarray(x, np.float32)
+    x = np.where(np.abs(x) < np.float32(2.0**-126), np.float32(0.0), x)
+    pad = (-x.shape[-1]) % 32
+    if pad:
+        x = np.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    xb = x.reshape(x.shape[:-1] + (x.shape[-1] // 32, 32)).astype(np.float64)
+    amax = np.abs(xb).max(-1)
+    with np.errstate(divide="ignore"):
+        e = np.floor(np.log2(np.where(amax > 0, amax, 1.0))) - 2
+    e = np.where(amax > 0, e, -127)
+    e = np.clip(e, -127, 127)
+    y = xb * 2.0 ** (-e[..., None])
+    ay = np.abs(y)
+    with np.errstate(divide="ignore"):
+        ee = np.clip(np.floor(np.log2(np.maximum(ay, 1e-300))), 0, 2)
+    step = 2.0 ** (ee - 1)
+    q = np.minimum(np.rint(ay / step) * step, 6.0)
+    codes = (np.sign(y) * 2 * q).reshape(x.shape).astype(np.int8)
+    return codes, e.astype(np.int8)
+
+
+def _assert_matches_ref(x: np.ndarray):
+    mx = mxlib.quantize(jnp.asarray(x))
+    rc, re = _quantize_ref_f64(x)
+    np.testing.assert_array_equal(np.asarray(mx.codes), rc)
+    np.testing.assert_array_equal(np.asarray(mx.exps), re)
+
+
+def test_bit_twiddle_quantizer_random_blocks():
+    rng = np.random.default_rng(0)
+    for scale in (1.0, 1e-3, 1e3, 1e30, 1e-30):
+        _assert_matches_ref(
+            rng.standard_normal((16, 96)).astype(np.float32) * scale
+        )
+
+
+def test_bit_twiddle_quantizer_grid_ties():
+    """Tie points of every E2M1 binade, swept across block scales —
+    ties-to-even on the local grid."""
+    ties = np.array([0.25, 0.75, 1.25, 1.75, 2.5, 3.5, 5.0, 7.0], np.float32)
+    rng = np.random.default_rng(1)
+    for e in (-20, -2, 0, 3, 19):
+        row = np.tile(ties, 4) * np.float32(2.0**e)
+        # anchor amax so the shared scale is exact and ties stay ties
+        row[0] = 6.0 * 2.0**e
+        _assert_matches_ref(row[None])
+    # random sign patterns over tie values
+    x = rng.choice(ties, size=(8, 32)) * rng.choice([-1.0, 1.0], (8, 32))
+    x[:, 0] = 6.0
+    _assert_matches_ref(x.astype(np.float32))
+
+
+def test_bit_twiddle_quantizer_binade_edges():
+    """amax one f32-ulp below a power of two: jnp.log2 rounds *up* there
+    (measured), so a log2-based floor skips the OCP clamp-at-6; the
+    exponent-field quantizer must take the f64-exact branch."""
+    below = np.nextafter(np.float32(4.0), np.float32(0.0))
+    x = np.zeros((3, 32), np.float32)
+    x[0, 0] = below
+    x[1, 0] = 4.0
+    x[2, 0] = np.nextafter(np.float32(4.0), np.float32(8.0))
+    _assert_matches_ref(x)
+    # the edge case really clamps: amax scales to just under 8 -> code 12
+    mx = mxlib.quantize(jnp.asarray(x))
+    assert int(mx.codes[0, 0]) == 12 and int(mx.exps[0, 0]) == -1
+
+
+def test_bit_twiddle_quantizer_zero_and_clamp_edges():
+    rng = np.random.default_rng(2)
+    zero = np.zeros((2, 64), np.float32)
+    _assert_matches_ref(zero)
+    np.testing.assert_array_equal(
+        np.asarray(mxlib.quantize(jnp.asarray(zero)).exps),
+        np.full((2, 2), mxlib.E8M0_MIN, np.int8),
+    )
+    # E8M0 clamp edges: largest finite f32 binade (e = 125; the +127 cap
+    # is reachable only through inf, where behavior is undefined) and the
+    # subnormal floor (e clamps at -127)
+    huge = (rng.uniform(0.5, 2.0, (4, 32)).astype(np.float32)
+            * np.float32(1.5e38)
+            * rng.choice([-1.0, 1.0], (4, 32)).astype(np.float32))
+    _assert_matches_ref(huge)
+    assert int(mxlib.quantize(jnp.asarray(huge)).exps.max()) == 125
+    tiny = rng.standard_normal((4, 32)).astype(np.float32) * np.float32(2e-38)
+    _assert_matches_ref(tiny)
+
+
+def test_fake_quant_paths_consistent():
+    """fake_quant (fused) == dequantize(quantize(x)); fake_quant_axis
+    (in-layout) == moveaxis composition. Bitwise."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((2, 48, 4, 16)).astype(np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(mxlib.fake_quant(x)),
+        np.asarray(mxlib.dequantize(mxlib.quantize(x), out_len=16)),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(mxlib.fake_quant_axis(x, 1)),
+        np.asarray(
+            jnp.moveaxis(mxlib.fake_quant(jnp.moveaxis(x, 1, -1)), -1, 1)
+        ),
+    )
+
+
+def test_quantize_axis_code_entry_point():
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.standard_normal((2, 64, 8)).astype(np.float32))
+    mx = mxlib.quantize_axis(x, 1)  # quantized axis moved last
+    ref = mxlib.quantize(jnp.moveaxis(x, 1, -1))
+    np.testing.assert_array_equal(np.asarray(mx.codes), np.asarray(ref.codes))
+    np.testing.assert_array_equal(np.asarray(mx.exps), np.asarray(ref.exps))
+
+
+# ------------------------------------------------ odd-shape kernels ==
+
+
+@pytest.mark.parametrize("m,k,n", [(197, 64, 96), (145, 96, 48), (34, 64, 80)])
+def test_mxfp4_kernel_odd_shapes(m, k, n):
+    """Pad-M-up wrapper: ViT's M=197/145 and non-multiple-of-128 N."""
+    kx, kw = jax.random.split(jax.random.PRNGKey(m + n))
+    x = jax.random.normal(kx, (m, k), jnp.bfloat16)
+    w = jax.random.normal(kw, (k, n), jnp.float32)
+    wq = mxlib.quantize_w(w)
+    codes = mxlib.pack_codes(wq.codes.T).T
+    exps = mxlib.exps_to_biased(wq.exps)
+    out = mm_ops.mxfp4_matmul(x, codes, exps, interpret=True)
+    ref = mm_ref.mxfp4_matmul_ref(x, codes, exps)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        rtol=2e-2, atol=2e-2 * np.abs(np.asarray(ref, np.float32)).max(),
+    )
+
+
+@pytest.mark.parametrize("m,k,n", [(197, 64, 96), (145, 96, 48)])
+def test_cim_kernel_fused_quantize_odd_shapes(m, k, n):
+    """The fused-quantize CIM kernel (raw activations in) matches the jnp
+    simulation at odd M and non-128 N."""
+    kx, kw = jax.random.split(jax.random.PRNGKey(m + n + 1))
+    x = jax.random.normal(kx, (m, k), jnp.float32)
+    w = jax.random.normal(kw, (k, n), jnp.float32)
+    wq = mxlib.quantize_w(w)
+    cfg = cimlib.CIMConfig()
+    calib = cimlib.calibrate_rowhist([x], wq, cfg)
+    out = cim_ops.cim_linear(x, wq, calib, cfg=cfg, interpret=True)
+    ref, _ = cimlib.cim_linear(x, wq, cfg, calib)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_pick_bm_never_degenerate():
+    from repro.kernels.mxfp4_matmul.ops import pick_bm
+
+    assert pick_bm(197) == 128  # pads up to 2 tiles, full-width tile
+    assert pick_bm(6) == 16  # pads up, never a 6-row tile
+    assert pick_bm(1024) == 128
+
+
+# -------------------------------------------- impl/interpret dispatch ==
+
+
+def test_interpret_default_is_platform_derived():
+    from repro.kernels import default_interpret
+
+    ctx = RunCtx(shd=ShardingCtx())
+    assert ctx.interpret == default_interpret()
+    # Mosaic/TPU kernels: interpreted everywhere except real TPUs
+    assert default_interpret() == (jax.default_backend() != "tpu")
+
+
+def test_impl_auto_dispatch():
+    ctx = RunCtx(shd=ShardingCtx())
+    assert ctx.impl == "auto"
+    assert ctx.use_pallas == (jax.default_backend() == "tpu")
+    assert dataclasses.replace(ctx, impl="pallas").use_pallas
+    assert not dataclasses.replace(ctx, impl="jnp").use_pallas
+
+
+# --------------------------------------- quantized-resident KV decode ==
+
+
+def _decode_ref_vs_resident(W, steps, pre, seed=0):
+    """Drive attn_apply's decode branch with and without the resident
+    code mirrors from identical inputs; returns per-step outputs."""
+    cfg = attn_mod.AttnStatic(
+        d_model=64, n_heads=4, n_kv=2, head_dim=32, use_rope=False
+    )
+    key = jax.random.PRNGKey(seed)
+    p, _ = attn_mod.attn_init(key, cfg)
+    ctx = RunCtx(shd=ShardingCtx(), quant="cim", dense_attn_max=256)
+    assert ctx.hybrid_digital_sdpa
+    b = 2
+    ref_cache = attn_mod.attn_cache_init(cfg, b, W, mx_digital=False)
+    res_cache = attn_mod.attn_cache_init(cfg, b, W, mx_digital=True)
+    # prefill-into-cache populates both (quantized mirrors on the resident)
+    x0 = jax.random.normal(jax.random.fold_in(key, 1), (b, pre, 64),
+                           jnp.bfloat16)
+    pos0 = jnp.broadcast_to(jnp.arange(pre)[None], (b, pre))
+    y_r, ref_cache = attn_mod.attn_apply(ctx, cfg, p, x0, pos0, ref_cache)
+    y_q, res_cache = attn_mod.attn_apply(ctx, cfg, p, x0, pos0, res_cache)
+    np.testing.assert_array_equal(
+        np.asarray(y_r, np.float32), np.asarray(y_q, np.float32)
+    )
+    outs = []
+    for t in range(steps):
+        xt = jax.random.normal(jax.random.fold_in(key, 100 + t), (b, 1, 64),
+                               jnp.bfloat16)
+        post = jnp.full((b, 1), pre + t)
+        pos = jnp.full((b,), pre + t, jnp.int32)
+        y_r, ref_cache = attn_mod.attn_apply(ctx, cfg, p, xt, post,
+                                             ref_cache, pos)
+        y_q, res_cache = attn_mod.attn_apply(ctx, cfg, p, xt, post,
+                                             res_cache, pos)
+        outs.append((np.asarray(y_r, np.float32),
+                     np.asarray(y_q, np.float32)))
+    return outs, ref_cache, res_cache
+
+
+def test_resident_kv_decode_bitwise_matches_requant():
+    """Resident K codes + active-block V requant == full requant-per-step,
+    bitwise, at every step — including a partial trailing V block
+    (W=48)."""
+    outs, ref_cache, res_cache = _decode_ref_vs_resident(W=48, steps=10,
+                                                        pre=5)
+    for t, (r, q) in enumerate(outs):
+        np.testing.assert_array_equal(r, q, err_msg=f"step {t}")
+    # the resident mirrors decode to exactly the raw cache's quantization
+    kd_ref = mxlib.fake_quant(ref_cache["k"].astype(jnp.float32))
+    kd_res = mxlib.dequantize(
+        mxlib.MX(res_cache["k_codes"], res_cache["k_exps"]), out_len=32
+    )
+    np.testing.assert_array_equal(np.asarray(kd_ref), np.asarray(kd_res))
+    vd_ref = mxlib.fake_quant_axis(ref_cache["v"].astype(jnp.float32), 1)
+    vd_res = jnp.moveaxis(
+        mxlib.dequantize(
+            mxlib.MX(res_cache["v_codes"], res_cache["v_exps"]), out_len=48
+        ),
+        -1, 1,
+    )
+    np.testing.assert_array_equal(np.asarray(vd_ref), np.asarray(vd_res))
+
+
+def test_resident_kv_decode_bitwise_through_ring_wrap():
+    """Ring wrap (pos >= W) rewrites old rows/blocks; the resident update
+    must requantize exactly the touched K row and V block."""
+    outs, _, _ = _decode_ref_vs_resident(W=32, steps=40, pre=3)
+    for t, (r, q) in enumerate(outs):
+        np.testing.assert_array_equal(r, q, err_msg=f"step {t}")
+
+
+def test_resident_pool_decode_matches_legacy_cache_lm():
+    """Model-level: lm.decode_step over an mx_digital cache tree equals
+    the legacy (requant-per-step) cache tree bitwise under the cim
+    backend."""
+    cfg = C.tiny(C.ARCHS["starcoder2-7b"])
+    from repro.models import calibrate, lm
+
+    params, _ = lm.init_model(jax.random.PRNGKey(0), cfg)
+    ctx = RunCtx(shd=ShardingCtx(), dense_attn_max=256)
+    batches = calibrate.calibration_batches(cfg, n_batches=1, batch=2,
+                                            seq=8)
+    conv, _ = calibrate.convert_model_cim(params, cfg, ctx, batches,
+                                          min_n=32)
+    hyb = dataclasses.replace(ctx, quant="cim")
+    ids = jax.random.randint(jax.random.PRNGKey(3), (2, 6), 0,
+                             cfg.vocab_size)
+    legacy = lm.init_cache(cfg, 2, 16, mx_digital=False)
+    resident = lm.init_cache(cfg, 2, 16, mx_digital=True)
+    _, legacy = lm.forward(conv, cfg, hyb, {"ids": ids}, caches=legacy)
+    _, resident = lm.forward(conv, cfg, hyb, {"ids": ids}, caches=resident)
+    tok = ids[:, -1:]
+    for t in range(4):
+        lg_l, legacy = lm.decode_step(conv, cfg, hyb, tok, jnp.int32(6 + t),
+                                      legacy)
+        lg_r, resident = lm.decode_step(conv, cfg, hyb, tok,
+                                        jnp.int32(6 + t), resident)
+        np.testing.assert_array_equal(
+            np.asarray(lg_l, np.float32), np.asarray(lg_r, np.float32),
+            err_msg=f"step {t}",
+        )
+        tok = jnp.argmax(lg_l.astype(jnp.float32), -1)[:, None]
