@@ -449,9 +449,16 @@ def backend_latency():
     Measures (i) the tiny forward under float / mxfp4 / cim, (ii) decode
     step latency vs cache length per backend — for cim both with the
     quantized-resident KV pool and against the requant-per-step reference
-    (legacy cache) — and (iii) the per-token KV-quantization primitive
+    (legacy cache) — (iii) the per-token KV-quantization primitive
     itself, where the resident path is O(1) in cache length and the
-    reference is O(cache_len).
+    reference is O(cache_len), and (iv) the paged serving decode over a
+    lanes x cache_len grid: the fused head-interleaved pool (in-place
+    ragged paged decode via RunCtx.paged_rows) against the legacy
+    gather -> decode -> scatter bracketing, plus the pool-I/O component
+    alone — the legacy bracket copies O(lanes * cache_len) per step and
+    grows linearly, the fused row write is O(lanes) and stays flat. Each
+    shape also logs the chunk width / DMA ring depth the Pallas kernel
+    picks for it (pick_bk / pick_buffers).
 
     Methodology notes: the model keeps every quantized dim 32-aligned
     (the paper's head dims are >= 64; a 16-wide smoke head pads every
@@ -565,6 +572,139 @@ def backend_latency():
             ),
         })
 
+    # ---- paged serving decode: fused in-place pool vs gather/scatter
+    # (quantized-resident pool — the mx mirrors make the legacy bracket's
+    # per-step copy volume the worst case)
+    from repro.kernels.paged_attention import ops as paged_ops
+    from repro.serving import kvcache as kv_mod
+
+    dctx = dataclasses.replace(ctx, quant="mxfp4_digital")
+    dparams = variants["mxfp4"][0]
+    paged_decode_us: dict = {}
+    paged_pool_io_us: dict = {}
+    paged_knobs: dict = {}
+    for lanes in (2, 4):
+        for W in (64, 256, 512, 1024):
+            shape_key = f"{lanes}x{W}"
+            bk = paged_ops.pick_bk(W)
+            paged_knobs[shape_key] = {
+                "bk": bk, "buffers": paged_ops.pick_buffers(W, bk)
+            }
+            rows = jnp.arange(lanes, dtype=jnp.int32)
+            ids = jnp.ones((lanes, 1), jnp.int32)
+            pos = jnp.full((lanes,), W - 1, jnp.int32)
+            kv_leg = kv_mod.PagedKVCache(cfg, lanes, lanes, W,
+                                         mx_digital=True)
+            kv_fus = kv_mod.PagedKVCache(cfg, lanes, lanes, W,
+                                         mx_digital=True, layout="fused")
+
+            def leg_step(pp, pool, rows, ids, pos, specs=kv_leg.specs):
+                caches = kv_mod.gather_rows(pool, specs, rows)
+                lg, caches = lm.decode_step(pp, cfg, dctx, ids, pos, caches)
+                return lg, kv_mod.scatter_rows(pool, specs, rows, caches)
+
+            def fus_step(pp, pool, rows, ids, pos):
+                c = dataclasses.replace(dctx, paged_rows=rows)
+                return lm.decode_step(pp, cfg, c, ids, pos, pool)
+
+            jleg, jfus = jax.jit(leg_step), jax.jit(fus_step)
+            paged_decode_us[shape_key] = interleaved_min({
+                "gather": lambda jleg=jleg, pool=kv_leg.pool:
+                    jleg(dparams, pool, rows, ids, pos)[0]
+                    .block_until_ready(),
+                "fused": lambda jfus=jfus, pool=kv_fus.pool:
+                    jfus(dparams, pool, rows, ids, pos)[0]
+                    .block_until_ready(),
+            }, reps=20)
+
+            # pool-I/O component alone: the legacy gather/scatter
+            # roundtrip vs the fused per-token row write
+            jio_leg = jax.jit(
+                lambda pool, rows, specs=kv_leg.specs: kv_mod.scatter_rows(
+                    pool, specs, rows,
+                    kv_mod.gather_rows(pool, specs, rows),
+                )
+            )
+            newrow = jnp.ones(
+                (lanes, 2 * cfg.n_kv_heads, cfg.hd), jnp.bfloat16
+            )
+
+            def row_write(pool, rows, nr, specs=kv_fus.specs, W=W):
+                # scanned segments carry a leading layers axis; index the
+                # batch/cache_seq axes from the spec like scatter_rows
+                out = []
+                for seg, spec in zip(pool, specs):
+                    ax = spec["kv"].index("batch")
+                    idx = (slice(None),) * ax + (rows, W - 1)
+                    out.append({**seg, "kv": seg["kv"].at[idx].set(nr)})
+                return out
+
+            jio_fus = jax.jit(row_write)
+            paged_pool_io_us[shape_key] = interleaved_min({
+                "gather_scatter": lambda pool=kv_leg.pool: jax.tree.map(
+                    lambda x: x.block_until_ready(),
+                    jio_leg(pool, rows),
+                ),
+                "row_write": lambda pool=kv_fus.pool: jax.tree.map(
+                    lambda x: x.block_until_ready(),
+                    jio_fus(pool, rows, newrow),
+                ),
+            }, reps=20)
+
+    io_growth_leg = (
+        paged_pool_io_us["4x1024"]["gather_scatter"]
+        / max(paged_pool_io_us["4x64"]["gather_scatter"], 1e-9)
+    )
+    io_growth_fus = (
+        paged_pool_io_us["4x1024"]["row_write"]
+        / max(paged_pool_io_us["4x64"]["row_write"], 1e-9)
+    )
+
+    # ---- ragged-kernel scaling at fixed occupancy: lanes hold `occ`
+    # valid tokens while the allocated page grows. The streaming kernel
+    # runs ceil(occ / bk) chunks per lane — page-size independent — while
+    # the dense gather path attends the whole masked page, O(page_len).
+    # Interpret-mode wall time tracks executed chunk count, so the
+    # *growth* of each curve across page sizes is meaningful even though
+    # absolute interpret latencies are not comparable to compiled jnp.
+    occ, pl_lanes = 64, 4
+    h_kv, dh = cfg.n_kv_heads, cfg.hd
+    paged_fixed_occ_us: dict = {}
+    for W in (64, 256, 512, 1024):
+        key = jax.random.PRNGKey(W)
+        pages = jax.random.normal(
+            key, (pl_lanes, W, 2 * h_kv, dh)
+        ).astype(jnp.bfloat16)
+        qh = jax.random.normal(key, (pl_lanes, h_kv, 4, dh)).astype(
+            jnp.bfloat16
+        )
+        rows = jnp.arange(pl_lanes, dtype=jnp.int32)
+        lens = jnp.full((pl_lanes,), occ, jnp.int32)
+        sc = float(dh) ** -0.5
+        kern = lambda pages=pages, qh=qh, rows=rows, lens=lens, sc=sc: (
+            paged_ops.ragged_paged_decode(
+                qh, rows, lens, kv=pages, scale=sc, use_pallas=True,
+                interpret=True, bk=32, buffers=2,
+            ).block_until_ready()
+        )
+        ref = jax.jit(
+            lambda pages, qh, rows, lens, sc=sc:
+            paged_ops.ragged_paged_decode(
+                qh, rows, lens, kv=pages, scale=sc, use_pallas=False
+            )
+        )
+        refc = lambda ref=ref, pages=pages, qh=qh, rows=rows, lens=lens: (
+            ref(pages, qh, rows, lens).block_until_ready()
+        )
+        paged_fixed_occ_us[str(W)] = interleaved_min(
+            {"kernel_interpret": kern, "gather_ref": refc}, reps=5
+        )
+    occ_growth = {
+        name: (paged_fixed_occ_us["1024"][name]
+               / max(paged_fixed_occ_us["64"][name], 1e-9))
+        for name in ("kernel_interpret", "gather_ref")
+    }
+
     ratios = {
         "mxfp4_vs_float": forward_us["mxfp4"] / forward_us["float"],
         "cim_vs_float": forward_us["cim"] / forward_us["float"],
@@ -586,6 +726,14 @@ def backend_latency():
         "kv_quant_step_us": {str(w): v for w, v in kv_quant_us.items()},
         "kv_quant_resident_growth_64_to_1024": res_flat,
         "kv_quant_requant_growth_64_to_1024": req_growth,
+        "paged_decode_us": paged_decode_us,
+        "paged_pool_io_us": paged_pool_io_us,
+        "paged_kernel_knobs": paged_knobs,
+        "paged_pool_io_growth_64_to_1024": {
+            "gather_scatter": io_growth_leg, "row_write": io_growth_fus,
+        },
+        "paged_fixed_occupancy_us": paged_fixed_occ_us,
+        "paged_fixed_occupancy_growth_64_to_1024": occ_growth,
     }
     with open("BENCH_backends.json", "w") as f:
         json.dump(result, f, indent=2)
@@ -593,8 +741,12 @@ def backend_latency():
         f"fwd us f/m/c {forward_us['float']:.0f}/{forward_us['mxfp4']:.0f}/"
         f"{forward_us['cim']:.0f} (mxfp4 {ratios['mxfp4_vs_float']:.2f}x, "
         f"cim {ratios['cim_vs_float']:.2f}x); KV-quant growth 64->1024: "
-        f"resident {res_flat:.2f}x vs requant {req_growth:.2f}x "
-        f"-> BENCH_backends.json"
+        f"resident {res_flat:.2f}x vs requant {req_growth:.2f}x; paged "
+        f"pool I/O growth 64->1024: gather/scatter {io_growth_leg:.1f}x "
+        f"vs fused row write {io_growth_fus:.1f}x; fixed-occupancy decode "
+        f"growth 64->1024: ragged kernel "
+        f"{occ_growth['kernel_interpret']:.2f}x vs dense gather "
+        f"{occ_growth['gather_ref']:.2f}x -> BENCH_backends.json"
     )
 
 

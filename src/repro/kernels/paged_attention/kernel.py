@@ -1,0 +1,331 @@
+"""Ragged paged flash-decode Pallas kernel with multi-buffered DMA.
+
+One grid program per (lane, KV head). The KV pool stays HBM-resident
+(``memory_space=ANY``); per-lane page rows and valid lengths arrive as
+scalar prefetch, and the program streams its lane's page in ``bk``-token
+chunks through a ``buffers``-deep VMEM ring of async copies — chunk
+``c + buffers`` starts as soon as slot ``c % buffers``'s tile has been
+consumed, so the HBM reads for upcoming chunks overlap the flash
+softmax/SV compute of the current one (double buffering at
+``buffers=2``, quad at 4). The fused head-interleaved page layout (see
+``layout``) lets a single copy per chunk stream both K and V for the
+program's head.
+
+Ragged lengths are handled per lane: ``nchunks = ceil(len / bk)`` drives
+a dynamic ``fori_loop``, a zero-length lane runs no chunks and stores
+zeros, and the tail chunk of a page whose width is not a multiple of
+``bk`` is fetched at a clamped offset (re-reading a little overlap) with
+the overlap masked out of the online softmax.
+
+The quantized-resident variant streams the MXFP4 code mirrors instead of
+raw pages — three copies per chunk (packed codes, K row exponents, the
+<= bk//32 + 1 V slot-block exponent rows) — and decodes them to bf16
+*inside* the VMEM tile via the ``core/mx`` pair table, so the
+HBM-resident cache never leaves the code domain (~4.25 bits/value of KV
+traffic instead of 16). V blocks are 32-slot-aligned in the pool, so the
+in-tile V dequant is exactly the global quantization; P re-quantizes per
+chunk along the key axis, the same granularity precedent as
+``layers.attention._flash_attn``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import mx as mxlib
+from repro.kernels import default_interpret
+
+BLOCK = mxlib.BLOCK
+NEG_INF = -1e30
+
+
+def _online_update(s, live, v, m_ref, l_ref, acc_ref, mx: bool):
+    """One flash-softmax accumulation step. s f32 [G, bk]; v bf16
+    [bk, Dh]; live bool [bk]."""
+    s = jnp.where(live[None, :], s, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(live[None, :], p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    if mx:
+        # per-chunk P quantization + quantized-P running normalizer
+        p = mxlib.fake_quant(p)
+        pv = jnp.einsum(
+            "gk,kd->gd", p.astype(jnp.bfloat16), v,
+            preferred_element_type=jnp.float32,
+        )
+    else:
+        pv = jnp.einsum("gk,kd->gd", p.astype(v.dtype), v).astype(
+            jnp.float32
+        )
+    acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+    m_ref[...] = m_new
+
+
+def _store(o_ref, acc_ref, l_ref):
+    den = jnp.where(l_ref[...] == 0.0, 1.0, l_ref[...])
+    o_ref[0, 0] = (acc_ref[...] / den[:, None]).astype(o_ref.dtype)
+
+
+def _decode_kernel(
+    rows_ref, lens_ref,  # scalar prefetch: int32 [L]
+    q_ref,  # [1, 1, G, Dh] VMEM
+    kv_ref,  # [P, W, 2Hkv, Dh] ANY (HBM)
+    o_ref,  # [1, 1, G, Dh]
+    buf, sem, acc_ref, m_ref, l_ref,
+    *, bk: int, buffers: int, scale: float,
+):
+    li, h = pl.program_id(0), pl.program_id(1)
+    row, ln = rows_ref[li], lens_ref[li]
+    w = kv_ref.shape[1]
+    nchunks = pl.cdiv(ln, bk)
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+    m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+    l_ref[...] = jnp.zeros_like(l_ref)
+
+    def offset(c):  # clamped tail fetch; overlap masked via `live`
+        return jnp.minimum(c * bk, w - bk)
+
+    def dma(slot, c):
+        return pltpu.make_async_copy(
+            kv_ref.at[row, pl.ds(offset(c), bk), pl.ds(2 * h, 2)],
+            buf.at[slot], sem.at[slot],
+        )
+
+    for i in range(buffers):  # warm-up: fill the ring
+        @pl.when(i < nchunks)
+        def _():
+            dma(i, i).start()
+
+    qv = q_ref[0, 0]  # [G, Dh]
+
+    def body(c, _):
+        slot = jax.lax.rem(c, buffers)
+        dma(slot, c).wait()
+        k, v = buf[slot][:, 0], buf[slot][:, 1]  # [bk, Dh]
+        pos = offset(c) + jax.lax.broadcasted_iota(jnp.int32, (bk,), 0)
+        live = (pos >= c * bk) & (pos < ln)
+        s = jnp.einsum(
+            "gd,kd->gk", qv, k, preferred_element_type=jnp.float32
+        ) * scale
+        _online_update(s, live, v, m_ref, l_ref, acc_ref, mx=False)
+
+        @pl.when(c + buffers < nchunks)  # slot just freed: fetch ahead
+        def _():
+            dma(slot, c + buffers).start()
+
+        return 0
+
+    jax.lax.fori_loop(0, nchunks, body, 0)
+    _store(o_ref, acc_ref, l_ref)
+
+
+def _decode_kernel_mx(
+    rows_ref, lens_ref,
+    q_ref,  # [1, 1, G, Dh] — already MXFP4-fake-quant bf16
+    table_ref,  # [256] uint32 pair table (core/mx.PAIR_TABLE)
+    kvc_ref,  # [P, W, 2Hkv, Dpad//2] uint8 ANY
+    ke_ref,  # [P, W, Hkv, Dpad//32] int8 ANY
+    ve_ref,  # [P, ceil(W/32), Hkv, Dh] int8 ANY
+    o_ref,
+    cbuf, kebuf, vebuf, csem, kesem, vesem, acc_ref, m_ref, l_ref,
+    *, bk: int, buffers: int, scale: float, hd: int,
+):
+    li, h = pl.program_id(0), pl.program_id(1)
+    row, ln = rows_ref[li], lens_ref[li]
+    w = kvc_ref.shape[1]
+    nbd = ke_ref.shape[-1]
+    nwb = ve_ref.shape[1]
+    nvb = vebuf.shape[1]  # V exponent rows fetched per chunk
+    nchunks = pl.cdiv(ln, bk)
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+    m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+    l_ref[...] = jnp.zeros_like(l_ref)
+
+    def offset(c):
+        return jnp.minimum(c * bk, w - bk)
+
+    def vblock0(c):  # first fetched v_exps row: covers the chunk's blocks
+        return jnp.minimum(offset(c) // BLOCK, nwb - nvb)
+
+    def dmas(slot, c):
+        offs = offset(c)
+        return (
+            pltpu.make_async_copy(
+                kvc_ref.at[row, pl.ds(offs, bk), pl.ds(2 * h, 2)],
+                cbuf.at[slot], csem.at[slot],
+            ),
+            pltpu.make_async_copy(
+                ke_ref.at[row, pl.ds(offs, bk), h],
+                kebuf.at[slot], kesem.at[slot],
+            ),
+            pltpu.make_async_copy(
+                ve_ref.at[row, pl.ds(vblock0(c), nvb), h],
+                vebuf.at[slot], vesem.at[slot],
+            ),
+        )
+
+    for i in range(buffers):
+        @pl.when(i < nchunks)
+        def _():
+            for d in dmas(i, i):
+                d.start()
+
+    qv = q_ref[0, 0]
+
+    def body(c, _):
+        slot = jax.lax.rem(c, buffers)
+        for d in dmas(slot, c):
+            d.wait()
+        offs = offset(c)
+        # in-tile pair-table dequant: codes -> bf16, * 2^(e-1) (exact)
+        table = table_ref[...]
+        kcodes = mxlib.unpack_pairs_bf16(cbuf[slot][:, 0], table)  # [bk, Dpad]
+        kscale = mxlib.exp2i(
+            kebuf[slot].astype(jnp.int32) - 1
+        ).astype(jnp.bfloat16)  # [bk, nbd]
+        k = (kcodes.reshape(bk, nbd, BLOCK) * kscale[:, :, None]).reshape(
+            bk, nbd * BLOCK
+        )[:, :hd]
+        vcodes = mxlib.unpack_pairs_bf16(cbuf[slot][:, 1], table)[:, :hd]
+        bi = (offs + jax.lax.broadcasted_iota(jnp.int32, (bk,), 0)) // BLOCK
+        vscale = jnp.take(
+            mxlib.exp2i(vebuf[slot].astype(jnp.int32) - 1).astype(
+                jnp.bfloat16
+            ),
+            bi - vblock0(c), axis=0,
+        )  # [bk, Dh] — slot-block shared exponents, globally aligned
+        v = vcodes * vscale
+        pos = offs + jax.lax.broadcasted_iota(jnp.int32, (bk,), 0)
+        live = (pos >= c * bk) & (pos < ln)
+        s = jnp.einsum(
+            "gd,kd->gk", qv, k, preferred_element_type=jnp.float32
+        ) * scale
+        s = s.astype(jnp.bfloat16).astype(jnp.float32)  # systolic round
+        _online_update(s, live, v, m_ref, l_ref, acc_ref, mx=True)
+
+        @pl.when(c + buffers < nchunks)
+        def _():
+            for d in dmas(slot, c + buffers):
+                d.start()
+
+        return 0
+
+    jax.lax.fori_loop(0, nchunks, body, 0)
+    _store(o_ref, acc_ref, l_ref)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "bk", "buffers", "interpret")
+)
+def paged_flash_decode(
+    q: jax.Array,  # [L, Hkv, G, Dh]
+    kv: jax.Array,  # [P, W, 2Hkv, Dh] fused pages
+    rows: jax.Array,  # int32 [L]
+    lengths: jax.Array,  # int32 [L], in [0, W]
+    *,
+    scale: float,
+    bk: int = 128,
+    buffers: int = 2,
+    interpret: bool | None = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = default_interpret()
+    L, hkv, g, dh = q.shape
+    w = kv.shape[1]
+    assert bk <= w, (bk, w)
+    scratch = [
+        pltpu.VMEM((buffers, bk, 2, dh), kv.dtype),
+        pltpu.SemaphoreType.DMA((buffers,)),
+        pltpu.VMEM((g, dh), jnp.float32),
+        pltpu.VMEM((g,), jnp.float32),
+        pltpu.VMEM((g,), jnp.float32),
+    ]
+    return pl.pallas_call(
+        functools.partial(
+            _decode_kernel, bk=bk, buffers=buffers, scale=scale
+        ),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(L, hkv),
+            in_specs=[
+                pl.BlockSpec((1, 1, g, dh), lambda l, h, *_: (l, h, 0, 0)),
+                pl.BlockSpec(memory_space=pltpu.ANY),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, 1, g, dh), lambda l, h, *_: (l, h, 0, 0)
+            ),
+            scratch_shapes=scratch,
+        ),
+        out_shape=jax.ShapeDtypeStruct((L, hkv, g, dh), kv.dtype),
+        interpret=interpret,
+    )(rows, lengths, q, kv)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "bk", "buffers", "interpret")
+)
+def paged_flash_decode_mx(
+    q: jax.Array,  # [L, Hkv, G, Dh] — already MXFP4-fake-quant bf16
+    kv_codes: jax.Array,  # [P, W, 2Hkv, Dpad//2] uint8
+    k_exps: jax.Array,  # [P, W, Hkv, Dpad//32] int8
+    v_exps: jax.Array,  # [P, ceil(W/32), Hkv, Dh] int8
+    rows: jax.Array,
+    lengths: jax.Array,
+    *,
+    scale: float,
+    bk: int = 128,
+    buffers: int = 2,
+    interpret: bool | None = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = default_interpret()
+    L, hkv, g, dh = q.shape
+    w = kv_codes.shape[1]
+    assert bk <= w, (bk, w)
+    nbd = k_exps.shape[-1]
+    nwb = v_exps.shape[1]
+    nvb = min(bk // BLOCK + 1, nwb) if bk >= BLOCK else 1
+    scratch = [
+        pltpu.VMEM((buffers, bk, 2, kv_codes.shape[-1]), jnp.uint8),
+        pltpu.VMEM((buffers, bk, nbd), jnp.int8),
+        pltpu.VMEM((buffers, nvb, dh), jnp.int8),
+        pltpu.SemaphoreType.DMA((buffers,)),
+        pltpu.SemaphoreType.DMA((buffers,)),
+        pltpu.SemaphoreType.DMA((buffers,)),
+        pltpu.VMEM((g, dh), jnp.float32),
+        pltpu.VMEM((g,), jnp.float32),
+        pltpu.VMEM((g,), jnp.float32),
+    ]
+    return pl.pallas_call(
+        functools.partial(
+            _decode_kernel_mx, bk=bk, buffers=buffers, scale=scale, hd=dh
+        ),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(L, hkv),
+            in_specs=[
+                pl.BlockSpec((1, 1, g, dh), lambda l, h, *_: (l, h, 0, 0)),
+                pl.BlockSpec((256,), lambda l, h, *_: (0,)),
+                pl.BlockSpec(memory_space=pltpu.ANY),
+                pl.BlockSpec(memory_space=pltpu.ANY),
+                pl.BlockSpec(memory_space=pltpu.ANY),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, 1, g, dh), lambda l, h, *_: (l, h, 0, 0)
+            ),
+            scratch_shapes=scratch,
+        ),
+        out_shape=jax.ShapeDtypeStruct((L, hkv, g, dh), jnp.bfloat16),
+        interpret=interpret,
+    )(
+        rows, lengths, q, jnp.asarray(mxlib.PAIR_TABLE), kv_codes,
+        k_exps, v_exps,
+    )

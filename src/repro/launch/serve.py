@@ -92,6 +92,7 @@ def serve_trace(args, cfg, params, ctx):
     ecfg = EngineConfig(
         lanes=args.lanes, num_slots=args.slots, page_len=page_len,
         prefill_len=prefill_len, policy=args.policy,
+        kv_layout=args.kv_layout,
     )
     eng = Engine(params, cfg, ctx, ecfg)
     rng = np.random.default_rng(0)
@@ -211,6 +212,11 @@ def main():
                     help="synthetic request count for --serve-trace")
     ap.add_argument("--lanes", type=int, default=4)
     ap.add_argument("--slots", type=int, default=6)
+    ap.add_argument("--kv-layout", default="legacy",
+                    choices=["legacy", "fused"],
+                    help="KV pool layout: legacy split K/V pages, or the "
+                         "fused head-interleaved paged layout decoded by "
+                         "the ragged paged flash-decode path")
     ap.add_argument("--policy", default="prefill",
                     choices=("prefill", "decode"))
     ap.add_argument("--frames", type=int, default=4,

@@ -293,6 +293,7 @@ def make_paged_decode_step(
     shape: C.Shape,
     num_slots: int,
     quant: str = "mxfp4_wonly",
+    kv_layout: str = "legacy",
 ) -> StepBundle:
     """Sharded continuous-batching decode step over a slot-paged KV pool.
 
@@ -304,9 +305,19 @@ def make_paged_decode_step(
     all-gathers under the mesh. Inputs beyond the dense step: ``rows``
     (int32 [lanes] pool-row per lane) and per-lane ``pos`` (int32
     [lanes]).
+
+    ``kv_layout="fused"`` switches the pool to the head-interleaved
+    paged layout and decodes in place through the ragged paged
+    flash-decode path (``RunCtx.paged_rows``): the step does O(lanes)
+    KV writes instead of gathering/scattering full pages.
     """
+    import dataclasses as _dc
+
     from repro.serving import kvcache as kv_mod
 
+    if kv_layout not in ("legacy", "fused"):
+        raise ValueError(f"unknown KV layout {kv_layout!r}")
+    fused = kv_layout == "fused"
     lanes = shape.batch
     ctx = RunCtx(
         shd=shd.make_ctx(cfg, mesh, "decode", batch_size=lanes),
@@ -316,10 +327,10 @@ def make_paged_decode_step(
     p_shard = shd.resolve_with_divisibility(specs, pstruct, ctx.shd, mesh)
 
     mx_dig = ctx.hybrid_digital_sdpa  # quantized-resident pool for cim
-    cspecs = lm.cache_specs(cfg, mx_digital=mx_dig)
+    cspecs = lm.cache_specs(cfg, mx_digital=mx_dig, fused=fused)
     pool_struct = jax.eval_shape(
         lambda: lm.init_cache(cfg, num_slots + lanes, shape.seq,
-                              mx_digital=mx_dig)
+                              mx_digital=mx_dig, fused=fused)
     )
     pool_shard = shd.resolve_with_divisibility(
         cspecs, pool_struct, ctx.shd, mesh
@@ -333,9 +344,14 @@ def make_paged_decode_step(
     )
 
     def paged_step(params, pool, rows, ids, pos):
-        caches = kv_mod.gather_rows(pool, cspecs, rows)
-        logits, caches = lm.decode_step(params, cfg, ctx, ids, pos, caches)
-        pool = kv_mod.scatter_rows(pool, cspecs, rows, caches)
+        if fused:
+            dctx = _dc.replace(ctx, paged_rows=rows)
+            logits, pool = lm.decode_step(params, cfg, dctx, ids, pos, pool)
+        else:
+            caches = kv_mod.gather_rows(pool, cspecs, rows)
+            logits, caches = lm.decode_step(params, cfg, ctx, ids, pos,
+                                            caches)
+            pool = kv_mod.scatter_rows(pool, cspecs, rows, caches)
         next_ids = jnp.argmax(logits.astype(jnp.float32), axis=-1)
         return next_ids.astype(i32), pool
 

@@ -16,6 +16,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import mx as mxlib
+from repro.kernels.paged_attention import layout as paged_layout
+from repro.kernels.paged_attention import ops as paged_ops
 from repro.layers import rope as ropelib
 from repro.layers.common import (
     RunCtx,
@@ -400,10 +402,11 @@ def attn_apply(
         v = jnp.where(kvm, v, jnp.zeros((), v.dtype))
     q = ctx.act(q.reshape(b, s, kv, g, hd), "batch", "seq", "kv_heads", "heads_g", "head_dim")
 
+    fused = cache is not None and "kv" in cache
     if cache is not None and s > 1:
         # prefill-into-cache: attention over the fresh K/V, cache filled
         # with the last W positions (ring convention: slot = pos % W)
-        w = cache["k"].shape[1]
+        w = (cache["kv"] if fused else cache["k"]).shape[1]
         if s < w:
             kw = jnp.pad(k, ((0, 0), (0, w - s), (0, 0), (0, 0)))
             vw = jnp.pad(v, ((0, 0), (0, w - s), (0, 0), (0, 0)))
@@ -413,14 +416,22 @@ def attn_apply(
             if roll:
                 kw = jnp.roll(kw, roll, axis=1)
                 vw = jnp.roll(vw, roll, axis=1)
-        new_cache = {"k": kw.astype(cache["k"].dtype),
-                     "v": vw.astype(cache["v"].dtype)}
-        if "k_codes" in cache:
-            # quantized-resident pool: fill the code mirrors from the
-            # cache-dtype-cast pages (what requant-per-step would see)
-            new_cache.update(
-                _quant_cache_full(new_cache["k"], new_cache["v"])
-            )
+        if fused:
+            dt = cache["kv"].dtype
+            kcast, vcast = kw.astype(dt), vw.astype(dt)
+            new_cache = {"kv": paged_layout.fuse_kv(kcast, vcast)}
+            if "kv_codes" in cache:
+                # same quantize calls as the legacy mirror fill, repacked
+                new_cache.update(paged_layout.quant_page_full(kcast, vcast))
+        else:
+            new_cache = {"k": kw.astype(cache["k"].dtype),
+                         "v": vw.astype(cache["v"].dtype)}
+            if "k_codes" in cache:
+                # quantized-resident pool: fill the code mirrors from the
+                # cache-dtype-cast pages (what requant-per-step would see)
+                new_cache.update(
+                    _quant_cache_full(new_cache["k"], new_cache["v"])
+                )
         k = ctx.act(k, "batch", "kv_seq", "kv_heads", "head_dim")
         v = ctx.act(v, "batch", "kv_seq", "kv_heads", "head_dim")
         if s <= ctx.dense_attn_max:
@@ -429,6 +440,49 @@ def attn_apply(
         else:
             o = _flash_attn(q, k, v, positions, positions, cfg, ctx,
                             mx_digital=mx_dig)
+    elif fused:
+        # fused paged decode: one ragged flash-decode call over the
+        # head-interleaved page pool. ``ctx.paged_rows`` maps lanes to
+        # pool rows (continuous-batching serving decodes in place — no
+        # per-step gather/scatter of full pages); without it lane i reads
+        # row i, which is exactly the legacy per-lane cache convention.
+        w = cache["kv"].shape[1]
+        pos_b = jnp.broadcast_to(jnp.asarray(pos), (b,))
+        rows = (jnp.arange(b) if ctx.paged_rows is None
+                else ctx.paged_rows)
+        slot = pos_b % w
+        kvnew = paged_layout.fuse_kv(k[:, 0], v[:, 0])
+        ckv = cache["kv"].at[rows, slot].set(
+            kvnew.astype(cache["kv"].dtype)
+        )
+        new_cache = {"kv": ckv}
+        resident = "kv_codes" in cache
+        if resident:
+            new_cache.update(
+                paged_layout.quant_page_step(cache, ckv, rows, slot)
+            )
+        # min(pos+1, W) reproduces the legacy ring-write validity mask
+        # ((idx <= pos) | (pos >= w)): a contiguous valid prefix, all W
+        # slots once the ring has wrapped
+        lengths = jnp.minimum(pos_b + 1, w)
+        qd, kv_pages, quant = q, ckv, None
+        if mx_dig:
+            if not resident:
+                raise ValueError(
+                    "fused paged decode under a digital-SDPA backend "
+                    "needs the quantized-resident mirrors — init the "
+                    "cache with mx_digital=True"
+                )
+            qd = _mx_fq(q).astype(jnp.bfloat16)
+            kv_pages = None
+            quant = {name: new_cache[name]
+                     for name in ("kv_codes", "k_exps", "v_exps")}
+        o = paged_ops.ragged_paged_decode(
+            qd[:, 0], rows, lengths, kv=kv_pages, quant=quant,
+            scale=cfg.scale, use_pallas=ctx.use_pallas,
+            interpret=ctx.interpret,
+            buffers=ctx.paged_buffers or None,
+        )[:, None]
     elif cache is not None:
         # pos may be a scalar (all lanes at the same position) or a [B]
         # vector (continuous-batching serving: each lane decodes at its own
@@ -502,10 +556,23 @@ def attn_apply(
 
 
 def attn_cache_init(cfg: AttnStatic, batch: int, max_len: int,
-                    dtype=jnp.bfloat16, mx_digital: bool = False):
+                    dtype=jnp.bfloat16, mx_digital: bool = False,
+                    fused: bool = False):
     """K/V decode cache; with ``mx_digital`` it additionally carries the
-    quantized-resident code mirrors for the digital-SDPA decode path."""
+    quantized-resident code mirrors for the digital-SDPA decode path.
+    ``fused`` selects the head-interleaved paged layout served by the
+    ragged paged flash-decode kernel (see ``kernels.paged_attention``)."""
     w = min(cfg.window, max_len) if cfg.window > 0 else max_len
+    if fused:
+        cache = paged_layout.fused_cache_init(
+            batch, w, cfg.n_kv, cfg.head_dim, dtype
+        )
+        if mx_digital:
+            cache.update(
+                paged_layout.fused_quant_init(batch, w, cfg.n_kv,
+                                              cfg.head_dim)
+            )
+        return cache
     shape = (batch, w, cfg.n_kv, cfg.head_dim)
     cache = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
     if mx_digital:
@@ -526,6 +593,21 @@ ATTN_QUANT_CACHE_SPECS = {
     "v_exps": ("batch", None, None, None),
 }
 
+FUSED_ATTN_CACHE_SPECS = {
+    "kv": ("batch", "cache_seq", None, None),
+}
 
-def attn_cache_specs(mx_digital: bool = False) -> dict:
+FUSED_ATTN_QUANT_CACHE_SPECS = {
+    **FUSED_ATTN_CACHE_SPECS,
+    "kv_codes": ("batch", "cache_seq", None, None),
+    "k_exps": ("batch", "cache_seq", None, None),
+    "v_exps": ("batch", None, None, None),  # slot-block-major key axis
+}
+
+
+def attn_cache_specs(mx_digital: bool = False,
+                     fused: bool = False) -> dict:
+    if fused:
+        return (FUSED_ATTN_QUANT_CACHE_SPECS if mx_digital
+                else FUSED_ATTN_CACHE_SPECS)
     return ATTN_QUANT_CACHE_SPECS if mx_digital else ATTN_CACHE_SPECS

@@ -49,27 +49,10 @@ from repro.core import mx as mxlib
 
 # ----------------------------------------------------------- param packing
 
-def _pair_table() -> np.ndarray:
-    """256-entry byte -> uint32 table: low/high u16 halves hold the bf16
-    bit patterns of the two E2M1 *code* values (2 * fp4 in [-12, 12]) a
-    packed byte carries (even row in the low nibble). One gather + one
-    bitcast decodes a whole byte — the per-nibble shift/select chain was
-    the dominant cost of the jnp serving path on CPU."""
-    byte = np.arange(256)
-
-    def val(nib):
-        m = nib & 1
-        e = (nib >> 1) & 3
-        c = np.where(e == 0, m, (2 + m) << np.maximum(e - 1, 0))
-        return np.where((nib >> 3) & 1, -c, c).astype(np.float32)
-
-    def bf16_bits(v):  # round-to-nearest is exact for these integers
-        return (v.astype(">f4").view(">u4") >> 16).astype(np.uint32)
-
-    return bf16_bits(val(byte & 15)) | (bf16_bits(val(byte >> 4)) << 16)
-
-
-_PAIR_TABLE = _pair_table()
+# byte -> two bf16 code values; shared with the paged-attention kernel's
+# in-tile KV dequant (repro.kernels.paged_attention), which decodes the
+# same nibble packing inside VMEM
+_PAIR_TABLE = mxlib.PAIR_TABLE
 
 
 def _dequant_packed(codes: jax.Array, exps: jax.Array) -> jax.Array:
@@ -80,7 +63,7 @@ def _dequant_packed(codes: jax.Array, exps: jax.Array) -> jax.Array:
     dequant intermediate traffic ~3x (decode is weight-read bound —
     EXPERIMENTS.md §Perf; the Pallas kernel removes even this by
     expanding inside VMEM). Each byte decodes through the u32 pair table
-    (:func:`_pair_table`) in one gather."""
+    (:data:`repro.core.mx.PAIR_TABLE`) in one gather."""
     kp2, n = codes.shape[-2], codes.shape[-1]
     k = kp2 * 2
     pair = jnp.asarray(_PAIR_TABLE)[codes.astype(jnp.int32)]  # [..., K//2, N]

@@ -136,6 +136,12 @@ class RunCtx:
     # numerics-identity checks (analog vs digital) are only bitwise under
     # unrolled op-by-op execution. Implied by an active tap.
     unroll_layers: bool = False
+    # int32 [batch] pool row per lane for the fused paged-KV decode path
+    # (None: lane i reads cache row i). Threaded *inside* the traced step
+    # via dataclasses.replace — an array field, so a RunCtx carrying it
+    # must never be closed over as a static value.
+    paged_rows: Any = None
+    paged_buffers: int = 0  # DMA ring depth override for the paged kernel (0: auto)
 
     def act(self, x, *axes):
         return self.shd.act(x, *axes)

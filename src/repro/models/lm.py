@@ -263,10 +263,10 @@ def init_model(key, cfg: ArchConfig):
 # --------------------------------------------------------------- caches
 
 def _block_cache(cfg: ArchConfig, seg: Segment, batch: int, max_len: int,
-                 mx_digital: bool = False):
+                 mx_digital: bool = False, fused: bool = False):
     if seg.kind in ("attn", "moe_attn", "zshared"):
         return attn_mod.attn_cache_init(seg.attn, batch, max_len,
-                                        mx_digital=mx_digital)
+                                        mx_digital=mx_digital, fused=fused)
     if seg.kind == "mamba":
         return ssm_mod.mamba_cache_init(seg.mamba, batch)
     if seg.kind == "mlstm":
@@ -276,9 +276,10 @@ def _block_cache(cfg: ArchConfig, seg: Segment, batch: int, max_len: int,
     raise ValueError(seg.kind)
 
 
-def _block_cache_specs(seg: Segment, mx_digital: bool = False):
+def _block_cache_specs(seg: Segment, mx_digital: bool = False,
+                       fused: bool = False):
     if seg.kind in ("attn", "moe_attn", "zshared"):
-        return attn_mod.attn_cache_specs(mx_digital)
+        return attn_mod.attn_cache_specs(mx_digital, fused=fused)
     if seg.kind == "mamba":
         return ssm_mod.MAMBA_CACHE_SPECS
     if seg.kind == "mlstm":
@@ -289,26 +290,32 @@ def _block_cache_specs(seg: Segment, mx_digital: bool = False):
 
 
 def init_cache(cfg: ArchConfig, batch: int, max_len: int,
-               mx_digital: bool = False):
+               mx_digital: bool = False, fused: bool = False):
     """Decode caches per segment (stacked along the layer axis for runs).
 
     ``mx_digital`` adds the quantized-resident K/V code mirrors that make
     per-token decode quantization O(1) in cache length on the hybrid /
     fully-digital MXFP4 SDPA path (bitwise identical to the
-    requant-per-step reference a plain cache falls back to)."""
+    requant-per-step reference a plain cache falls back to). ``fused``
+    selects the head-interleaved paged layout for attention segments —
+    decode then runs the ragged paged flash-decode path (see
+    ``kernels.paged_attention``)."""
     caches = []
     for seg in build_segments(cfg):
-        c = _block_cache(cfg, seg, batch, max_len, mx_digital=mx_digital)
+        c = _block_cache(cfg, seg, batch, max_len, mx_digital=mx_digital,
+                         fused=fused)
         if seg.n > 1:
             c = jax.tree.map(lambda x: jnp.broadcast_to(x, (seg.n,) + x.shape), c)
         caches.append(c)
     return caches
 
 
-def cache_specs(cfg: ArchConfig, mx_digital: bool = False):
+def cache_specs(cfg: ArchConfig, mx_digital: bool = False,
+                fused: bool = False):
     out = []
     for seg in build_segments(cfg):
-        s = dict(_block_cache_specs(seg, mx_digital=mx_digital))
+        s = dict(_block_cache_specs(seg, mx_digital=mx_digital,
+                                    fused=fused))
         if seg.n > 1:
             s = {k: ("layers",) + v for k, v in s.items()}
         out.append(s)

@@ -42,6 +42,12 @@ class EngineConfig:
     page_len: int = 48  # positions per page (prompt + generated)
     prefill_len: int = 16  # fixed prefill shape; prompts pad up to this
     policy: str = "prefill"  # admission policy (see scheduler.py)
+    # "fused" switches the pool to the head-interleaved paged layout and
+    # decodes in place through the ragged paged flash-decode path —
+    # RunCtx.paged_rows maps lanes to pool rows inside the jitted step,
+    # so a decode step does O(lanes) KV writes instead of gathering and
+    # scattering full pages
+    kv_layout: str = "legacy"  # legacy | fused
 
 
 class Engine:
@@ -55,7 +61,8 @@ class Engine:
         # hybrid / fully-digital MXFP4 SDPA: the pool keeps K/V codes
         # resident so decode quantization is O(1) in cache length
         self.kv = PagedKVCache(cfg, ecfg.num_slots, ecfg.lanes, ecfg.page_len,
-                               mx_digital=ctx.hybrid_digital_sdpa)
+                               mx_digital=ctx.hybrid_digital_sdpa,
+                               layout=ecfg.kv_layout)
         self.sched = Scheduler(ecfg.lanes, ecfg.policy)
         self.requests: dict[int, Request] = {}
         self.trace: list = []  # (kind, rids, n_tokens) per scheduled step
@@ -71,7 +78,8 @@ class Engine:
 
         def prefill(params, pool, ids, positions, row, last):
             caches = lm.init_cache(cfg, 1, ecfg.page_len,
-                                   mx_digital=self.kv.mx_digital)
+                                   mx_digital=self.kv.mx_digital,
+                                   fused=self.kv.fused)
             hidden, caches = lm.forward(
                 params, cfg, ctx, {"ids": ids, "positions": positions},
                 caches=caches, return_hidden=True,
@@ -89,6 +97,17 @@ class Engine:
             logits, caches = lm.decode_step(params, cfg, ctx, ids, pos, caches)
             pool = scatter_rows(pool, specs, rows, caches)
             return jnp.argmax(logits.astype(jnp.float32), -1), pool
+
+        def decode_fused(params, pool, rows, ids, pos):
+            # in-place paged decode: lanes address their pool rows through
+            # RunCtx.paged_rows (threaded inside the trace — never closed
+            # over), so no page gather/scatter brackets the step
+            dctx = dataclasses.replace(ctx, paged_rows=rows)
+            logits, pool = lm.decode_step(params, cfg, dctx, ids, pos, pool)
+            return jnp.argmax(logits.astype(jnp.float32), -1), pool
+
+        if self.kv.fused:
+            decode = decode_fused
 
         return (
             jax.jit(prefill, donate_argnums=(1,)),

@@ -80,14 +80,27 @@ def gather_rows(pool, specs, rows):
 
 def scatter_rows(pool, specs, rows, values):
     """Write an R-row cache tree back into pool rows ``rows``. Rows must
-    be unique (slots are, and idle lanes park on per-lane scratch rows)."""
+    be unique (slots are, and idle lanes park on per-lane scratch rows).
+
+    Leaf dtypes must round-trip: a value leaf whose dtype does not
+    promote losslessly to the pool leaf's dtype (e.g. f32 pages written
+    into a bf16 pool) raises instead of silently truncating mantissas on
+    the way back in."""
     out = []
     for seg_pool, seg_spec, seg_val in zip(pool, specs, values):
         seg = {}
         for k, v in seg_pool.items():
+            val = seg_val[k]
+            if val.dtype != v.dtype and (
+                jnp.promote_types(val.dtype, v.dtype) != v.dtype
+            ):
+                raise TypeError(
+                    f"scatter_rows: lossy write of {k}: {val.dtype} "
+                    f"values into a {v.dtype} pool leaf"
+                )
             ax = _batch_axis(seg_spec[k])
             idx = (slice(None),) * ax + (rows,)
-            seg[k] = v.at[idx].set(seg_val[k].astype(v.dtype))
+            seg[k] = v.at[idx].set(val.astype(v.dtype))
         out.append(seg)
     return out
 
@@ -98,10 +111,17 @@ class PagedKVCache:
     ``mx_digital`` pools carry quantized-resident K/V code mirrors next to
     the raw pages (see ``layers.attention``): decode re-quantizes only the
     written K row and active V block per step instead of the whole page.
+
+    ``layout="fused"`` allocates the head-interleaved paged layout
+    (``kernels.paged_attention.layout``): decode then runs the ragged
+    paged flash-decode path directly against the pool via
+    ``RunCtx.paged_rows`` — no per-step gather/scatter of full pages.
     """
 
     def __init__(self, cfg, num_slots: int, lanes: int, page_len: int,
-                 mx_digital: bool = False):
+                 mx_digital: bool = False, layout: str = "legacy"):
+        if layout not in ("legacy", "fused"):
+            raise ValueError(f"unknown KV layout {layout!r}")
         for seg in lm.build_segments(cfg):
             if seg.kind not in ("attn", "moe_attn"):
                 raise NotImplementedError(
@@ -119,9 +139,12 @@ class PagedKVCache:
         self.lanes = lanes
         self.page_len = page_len
         self.mx_digital = mx_digital
-        self.specs = lm.cache_specs(cfg, mx_digital=mx_digital)
+        self.layout = layout
+        self.fused = layout == "fused"
+        self.specs = lm.cache_specs(cfg, mx_digital=mx_digital,
+                                    fused=self.fused)
         self.pool = lm.init_cache(cfg, num_slots + lanes, page_len,
-                                  mx_digital=mx_digital)
+                                  mx_digital=mx_digital, fused=self.fused)
         self.allocator = SlotAllocator(num_slots)
 
     def scratch_row(self, lane: int) -> int:

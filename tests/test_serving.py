@@ -112,6 +112,21 @@ def test_paged_pool_gather_scatter_roundtrip():
             np.testing.assert_array_equal(o[keep], p[keep])
 
 
+def test_scatter_rows_rejects_lossy_dtype():
+    """Regression: scatter used to silently ``.astype`` values into the
+    pool dtype — f32 pages written into a bf16 pool lost mantissa bits
+    with no signal. Lossy writes now raise; widening writes still pass."""
+    kv = PagedKVCache(CFG, num_slots=2, lanes=1, page_len=8)
+    rows = jnp.asarray([0], jnp.int32)
+    good = gather_rows(kv.pool, kv.specs, rows)
+    bad = jax.tree.map(lambda x: x.astype(jnp.float32)
+                       if x.dtype == jnp.bfloat16 else x, good)
+    with pytest.raises(TypeError, match="lossy"):
+        scatter_rows(kv.pool, kv.specs, rows, bad)
+    # same-dtype and widening (f16 -> f32 would promote) writes still work
+    scatter_rows(kv.pool, kv.specs, rows, good)
+
+
 def test_paged_pool_rejects_recurrent_and_narrow_window():
     with pytest.raises(NotImplementedError, match="attention-only"):
         PagedKVCache(C.tiny(C.ARCHS["zamba2-1.2b"]), 2, 2, 8)
