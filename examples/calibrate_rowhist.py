@@ -10,6 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import cim, mx
+from repro.obs import sqnr_db
 
 rng = np.random.default_rng(0)
 layers = {
@@ -34,9 +35,7 @@ for name, (k, m) in layers.items():
     calib = cim.calibrate_rowhist(xs, wq, cfg)
     y, st = cim.cim_linear(xs[0], wq, cfg, calib)
     ref = mx.dequantize(mx.quantize(xs[0]), out_len=k) @ mx.dequantize_w(wq)
-    sqnr = 10 * np.log10(
-        float(jnp.mean(ref**2)) / max(float(jnp.mean((y - ref) ** 2)), 1e-30)
-    )
+    sqnr = sqnr_db(ref, y)
     print(f"{name:10s} {int(calib.e_n):5d} {float(calib.adc_fs):10.1f} "
           f"{float(st['underflow_rate_p2']):18.4f} {sqnr:8.1f}")
 
@@ -51,10 +50,7 @@ for cmb in (1, 2, 3, 4, 5):
                             collect_stats=True)
         calib = cim.calibrate_rowhist(xs, wq, cfg)
         y, st = cim.cim_linear(xs[0], wq, cfg, calib)
-        sqnr = 10 * np.log10(
-            float(jnp.mean(ref**2)) / max(float(jnp.mean((y - ref) ** 2)),
-                                          1e-30)
-        )
+        sqnr = sqnr_db(ref, y)
         print(f"CM={cmb} {'2-pass' if two else '1-pass'}: "
               f"underflow={float(st['underflow_rate_p1' if not two else 'underflow_rate_p2']):.3f} "
               f"SQNR={sqnr:6.1f} dB")

@@ -1,0 +1,120 @@
+#!/usr/bin/env python
+"""Pretty-print a serving metrics snapshot.
+
+Reads the JSON snapshot written by ``--metrics-out`` (or, with
+``--prom``, the Prometheus text exposition next to it) and renders a
+terminal summary: counters/gauges as a table, histograms with
+count/mean and p50/p90/p99, plus the request summary and SLO verdict
+when the snapshot carries them.
+
+Usage:
+  PYTHONPATH=src python scripts/metrics_summary.py metrics.json
+  PYTHONPATH=src python scripts/metrics_summary.py --prom metrics.prom
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _fmt(v) -> str:
+    if v is None:
+        return "-"
+    if isinstance(v, float):
+        if v == 0:
+            return "0"
+        if abs(v) < 1e-3 or abs(v) >= 1e6:
+            return f"{v:.3g}"
+        return f"{v:.4f}".rstrip("0").rstrip(".")
+    return str(v)
+
+
+def _labelstr(labels: dict) -> str:
+    if not labels:
+        return ""
+    return "{" + ",".join(f"{k}={v}" for k, v in sorted(labels.items())) + "}"
+
+
+def summarize_json(snap: dict, out=sys.stdout) -> None:
+    metrics = snap.get("metrics", snap)
+    scalars, histos = [], []
+    for name, fam in sorted(metrics.items()):
+        for s in fam.get("series", []):
+            row_name = name + _labelstr(s.get("labels", {}))
+            if fam.get("type") == "histogram":
+                histos.append((row_name, s))
+            else:
+                scalars.append((row_name, fam.get("type", "?"), s.get("value")))
+    if scalars:
+        w = max(len(n) for n, _, _ in scalars)
+        print("-- counters / gauges", file=out)
+        for name, kind, v in scalars:
+            print(f"  {name:<{w}}  {kind:<7} {_fmt(v)}", file=out)
+    if histos:
+        w = max(len(n) for n, _ in histos)
+        print("-- histograms (seconds unless named otherwise)", file=out)
+        head = f"  {'':<{w}}  {'count':>7} {'mean':>10} {'p50':>10} " \
+               f"{'p90':>10} {'p99':>10} {'max':>10}"
+        print(head, file=out)
+        for name, s in histos:
+            mean = s["sum"] / s["count"] if s.get("count") else None
+            print(
+                f"  {name:<{w}}  {s.get('count', 0):>7} {_fmt(mean):>10} "
+                f"{_fmt(s.get('p50')):>10} {_fmt(s.get('p90')):>10} "
+                f"{_fmt(s.get('p99')):>10} {_fmt(s.get('max')):>10}",
+                file=out,
+            )
+    req = snap.get("requests")
+    if req:
+        print("-- requests", file=out)
+        print(f"  finished={req.get('n_requests')} "
+              f"tokens={req.get('n_tokens')} "
+              f"reasons={req.get('finish_reasons')}", file=out)
+        for k in ("ttft_s", "queue_wait_s", "token_latency_s", "e2e_s"):
+            p = req.get(k)
+            if p:
+                print(f"  {k:<16} p50={_fmt(p['p50'])} p90={_fmt(p['p90'])} "
+                      f"p99={_fmt(p['p99'])} n={p['n']}", file=out)
+    slo = snap.get("slo")
+    if slo:
+        verdict = "PASS" if slo.get("pass") else "FAIL"
+        print(f"-- slo: {verdict}", file=out)
+        for name, chk in (slo.get("checks") or {}).items():
+            ok = {True: "ok", False: "VIOLATED", None: "no-data"}[chk["ok"]]
+            print(f"  {name:<16} target={_fmt(chk['target_s'])} "
+                  f"observed={_fmt(chk['observed_s'])} {ok}", file=out)
+
+
+def summarize_prom(text: str, out=sys.stdout) -> None:
+    from repro.obs import parse_prometheus
+
+    samples = parse_prometheus(text)
+    w = max(
+        (len(n + _labelstr(dict(ls))) for (n, ls) in samples), default=0
+    )
+    for (name, labels), v in sorted(samples.items()):
+        print(f"  {name + _labelstr(dict(labels)):<{w}}  {_fmt(v)}",
+              file=out)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("path", help="metrics snapshot (.json, or .prom "
+                                 "with --prom)")
+    ap.add_argument("--prom", action="store_true",
+                    help="input is a Prometheus text exposition")
+    args = ap.parse_args(argv)
+    try:
+        with open(args.path) as f:
+            if args.prom:
+                summarize_prom(f.read())
+            else:
+                summarize_json(json.load(f))
+    except BrokenPipeError:  # e.g. piped into head
+        sys.exit(0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,14 +1,6 @@
-"""Shared fidelity metrics for benchmarks, examples and tests."""
+"""Compatibility shim: ``sqnr_db`` moved to ``repro.obs.fidelity``
+(the telemetry namespace); import from ``repro.obs`` in new code."""
 
 from __future__ import annotations
 
-import numpy as np
-
-
-def sqnr_db(ref, test) -> float:
-    """Signal-to-quantization-noise ratio in dB (f64 accumulation)."""
-    ref = np.asarray(ref, np.float64)
-    err = np.asarray(test, np.float64) - ref
-    return float(
-        10 * np.log10((ref**2).mean() / max((err**2).mean(), 1e-30))
-    )
+from repro.obs.fidelity import sqnr_db  # noqa: F401

@@ -11,6 +11,7 @@ from repro.core import cim as cimlib
 from repro.core import mx as mxlib
 from repro.kernels.cim_linear.kernel import cim_linear_kernel
 from repro.kernels.mxfp4_matmul.ops import _round_up, pick_bm
+from repro.obs.profile import profiled_call
 
 
 def cim_linear(
@@ -20,6 +21,7 @@ def cim_linear(
     *,
     cfg: cimlib.CIMConfig | None = None,
     interpret: bool | None = None,  # None -> platform default
+    obs=None,  # repro.obs.Obs: named timing scope + optional wall capture
 ) -> jax.Array:
     """x [..., K] float -> [..., N] f32 through the analog CIM kernel."""
     cfg = cfg or cimlib.CIMConfig()
@@ -42,10 +44,14 @@ def cim_linear(
     cal = jnp.array(
         [[jnp.asarray(calib.e_n, jnp.float32), calib.adc_fs]], jnp.float32
     )
-    out = cim_linear_kernel(
-        xm, w.codes, w.exps, cal,
-        bm=bm, bn=bn, bk=max(bk, 32), cm=cfg.cm_bits, adc_bits=cfg.adc_bits,
-        two_pass=cfg.two_pass, interpret=interpret,
+    out = profiled_call(
+        "cim_linear", obs,
+        lambda: cim_linear_kernel(
+            xm, w.codes, w.exps, cal,
+            bm=bm, bn=bn, bk=max(bk, 32), cm=cfg.cm_bits,
+            adc_bits=cfg.adc_bits, two_pass=cfg.two_pass,
+            interpret=interpret,
+        ),
     )
     if pm:
         out = out[:m]

@@ -8,6 +8,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.mxfp4_matmul.kernel import mxfp4_matmul_kernel
+from repro.obs.profile import profiled_call
 
 
 def _round_up(x: int, m: int) -> int:
@@ -29,6 +30,7 @@ def mxfp4_matmul(
     *,
     block: tuple[int, int, int] = (128, 128, 128),
     interpret: bool | None = None,  # None -> platform default
+    obs=None,  # repro.obs.Obs: named timing scope + optional wall capture
 ) -> jax.Array:
     """x [..., K] @ dequant(codes [K//2, N], exps [K//32, N]) -> [..., N]."""
     lead = x.shape[:-1]
@@ -49,9 +51,12 @@ def mxfp4_matmul(
         bn //= 2
     while k % bk or bk % 32:
         bk //= 2
-    out = mxfp4_matmul_kernel(
-        xm, codes, exps, bm=bm, bn=bn, bk=max(bk, 32),
-        out_dtype=jnp.bfloat16, interpret=interpret,
+    out = profiled_call(
+        "mxfp4_matmul", obs,
+        lambda: mxfp4_matmul_kernel(
+            xm, codes, exps, bm=bm, bn=bn, bk=max(bk, 32),
+            out_dtype=jnp.bfloat16, interpret=interpret,
+        ),
     )
     if pm:
         out = out[:m]

@@ -11,22 +11,34 @@ workloads instead: a single-stream frame engine whose measured stage
 traffic drives the twelve-stage FWS pipeline model and is cross-checked
 against the paper's Table 7 FPS row (dual-chip 12+12 for vit-l32).
 
+Telemetry: every run carries a ``repro.obs`` handle — request-trace
+spans + pipeline occupancy metrics land in a metrics registry that
+``--metrics-out PATH`` dumps as a JSON snapshot plus a Prometheus text
+exposition (``PATH`` with a ``.prom`` suffix). ``--profile`` turns on
+eager kernel wall-clock capture (named scopes are always on);
+``--slo-ttft-ms`` / ``--slo-token-ms`` score the run against latency
+targets. ``--log-level`` controls the structured per-step log lines.
+
 Local smoke:
   PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --tiny \
       --tokens 16
   PYTHONPATH=src python -m repro.launch.serve --tiny --backend cim
   PYTHONPATH=src python -m repro.launch.serve --model vit-b16 --backend cim
+  PYTHONPATH=src python -m repro.launch.serve --tiny --serve-trace \
+      --metrics-out metrics.json --log-level debug
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
 import jax.numpy as jnp
 
 from repro import configs as C
+from repro import obs as obs_lib
 from repro.core import cim as cimlib
 from repro.layers.common import RunCtx, ShardingCtx, convert_params_mxfp4
 from repro.models import calibrate, lm
@@ -34,17 +46,19 @@ from repro.models.lm import build_segments
 
 
 def build_backend(args, cfg, params, batches=None, forward_fn=None,
-                  mxfp4_min_n: int = 256):
+                  mxfp4_min_n: int = 256, obs=None):
     """Returns (converted_params, RunCtx) for the requested backend.
 
     ``batches``/``forward_fn`` select the calibration capture for the cim
     backend (default: LM token batches through ``lm.forward``; the vision
-    path passes synthetic images through ``vit.forward``).
+    path passes synthetic images through ``vit.forward``). ``obs`` is the
+    telemetry handle threaded into the RunCtx (kernel profiling scopes).
     """
     shd = ShardingCtx()
-    kw = dict(shd=shd, dense_attn_max=256, impl=args.impl)
+    kw = dict(shd=shd, dense_attn_max=256, impl=args.impl, obs=obs)
     if getattr(args, "interpret", None) is not None:
         kw["interpret"] = args.interpret  # else: platform default
+    log = obs_lib.get_logger("repro.serve", getattr(args, "log_level", "info"))
     if args.backend == "float":
         return params, RunCtx(**kw)
     if args.backend == "mxfp4":
@@ -67,19 +81,48 @@ def build_backend(args, cfg, params, batches=None, forward_fn=None,
             params, cfg, base_ctx, batches,
             cim_cfg=cim_cfg, min_n=args.cim_min_n, forward_fn=forward_fn,
         )
-        print(f"row-hist calibration: {len(calibs)} static linears -> "
-              f"analog arrays in {time.time() - t0:.1f}s")
+        log.info(
+            "row-hist calibration: %s",
+            obs_lib.kv(linears=len(calibs), wall_s=time.time() - t0),
+        )
         return conv, RunCtx(quant="cim", cim=cim_cfg, **kw)
     raise SystemExit(f"unknown --backend {args.backend!r}")
 
 
-def serve_trace(args, cfg, params, ctx):
+def _mk_obs(args) -> obs_lib.Obs:
+    return obs_lib.Obs(profile=args.profile)
+
+
+def _finish_metrics(args, obs: obs_lib.Obs, log) -> None:
+    """Score SLOs (when targets given) and write the metrics snapshot."""
+    targets = obs_lib.SLOTargets(
+        ttft_p99_s=args.slo_ttft_ms / 1e3 if args.slo_ttft_ms else None,
+        token_p99_s=args.slo_token_ms / 1e3 if args.slo_token_ms else None,
+    )
+    slo = None
+    if any(v is not None for v in targets.asdict().values()):
+        slo = obs_lib.evaluate_slo(obs.finished, targets)
+        log.info("slo: %s", obs_lib.kv(
+            ok=slo["pass"], **{k: v for k, v in slo["violations"].items()}
+        ))
+    if args.metrics_out:
+        extra = {"requests": obs.request_summary()}
+        if slo is not None:
+            extra["slo"] = slo
+        jp, pp = obs_lib.write_metrics(obs.registry, args.metrics_out,
+                                       extra=extra)
+        log.info("metrics written: %s", obs_lib.kv(json=jp, prom=pp))
+
+
+def serve_trace(args, cfg, params, ctx, obs: obs_lib.Obs):
     """Continuous-batching serving demo: a burst of staggered synthetic
     requests through ``serving.Engine``, then the schedule mapped onto the
     twelve-stage FWS pipeline model (simulated latency / throughput)."""
     import numpy as np
 
     from repro.serving import Engine, EngineConfig
+
+    log = obs_lib.get_logger("repro.serve", args.log_level)
 
     # page budget: full-attention archs take prompt+tokens; sliding-window
     # archs must keep the page inside the narrowest window (no ring wrap)
@@ -94,9 +137,33 @@ def serve_trace(args, cfg, params, ctx):
         prefill_len=prefill_len, policy=args.policy,
         kv_layout=args.kv_layout,
     )
-    eng = Engine(params, cfg, ctx, ecfg)
-    rng = np.random.default_rng(0)
+    eng = Engine(params, cfg, ctx, ecfg, obs=obs)
     t0 = time.time()
+    tokens_done = 0
+
+    def step_logged():
+        nonlocal tokens_done
+        done = eng.step()
+        if not obs.steps:
+            return done
+        ev = obs.steps[-1]
+        live = eng.sched.num_active
+        tokens_done += len(ev.rids) if ev.kind == "decode" else 1
+        log.debug("step %s", obs_lib.kv(
+            n=len(obs.steps), kind=ev.kind, live=live,
+            free_slots=eng.kv.num_free, queued=len(eng.sched.waiting),
+            wall_ms=ev.wall_s * 1e3,
+        ))
+        if len(obs.steps) % args.log_every == 0:
+            log.info("progress %s", obs_lib.kv(
+                step=len(obs.steps), live=live,
+                free_slots=eng.kv.num_free, queued=len(eng.sched.waiting),
+                tokens=tokens_done,
+                tok_s=tokens_done / max(time.time() - t0, 1e-9),
+            ))
+        return done
+
+    rng = np.random.default_rng(0)
     for i in range(args.requests):
         n = int(rng.integers(2, prefill_len + 1))
         prompt = rng.integers(0, cfg.vocab_size, size=n).tolist()
@@ -104,35 +171,47 @@ def serve_trace(args, cfg, params, ctx):
                                             page_len - n))
         # staggered arrivals: a couple of engine steps between submissions
         for _ in range(int(rng.integers(0, 3))):
-            eng.step()
-    out = eng.run()
+            step_logged()
+    while eng.sched.has_work:
+        step_logged()
+    out = {rid: list(r.out) for rid, r in eng.requests.items()}
     dt = time.time() - t0
     rep = eng.trace_report()
+    rep.publish(obs.registry)
     lat = sorted(rep.request_latency.values())
     n_tok = sum(len(v) for v in out.values())
-    print(
-        f"{cfg.name} [{args.backend}] serve-trace: {len(out)} requests, "
-        f"{n_tok} tokens in {dt:.2f}s wall ({n_tok / dt:.1f} tok/s host)"
+    log.info(
+        "%s [%s] serve-trace done: %s", cfg.name, args.backend,
+        obs_lib.kv(requests=len(out), tokens=n_tok, wall_s=dt,
+                   tok_s_host=n_tok / dt),
     )
-    print(
-        f"  engine: policy={ecfg.policy} lanes={ecfg.lanes} "
-        f"slots={ecfg.num_slots} page={ecfg.page_len} "
-        f"slot_util={eng.slot_utilization:.2f}"
-    )
-    print(
-        f"  FWS pipeline model (d={cfg.d_model}): "
-        f"{rep.tokens_per_s:.0f} tok/s, steady-state "
-        f"{rep.pipeline.steady_state_fps:.0f} batches/s, stage util "
-        f"{rep.pipeline.stage_utilization:.2f} "
-        f"(analog {rep.pipeline.analog_utilization:.2f} / digital "
-        f"{rep.pipeline.digital_utilization:.2f} of busy)"
-    )
-    print(
-        f"  sim latency p50 {lat[len(lat) // 2] * 1e6:.1f}us / max "
-        f"{lat[-1] * 1e6:.1f}us"
-    )
+    log.info("engine: %s", obs_lib.kv(
+        policy=ecfg.policy, lanes=ecfg.lanes, slots=ecfg.num_slots,
+        page=ecfg.page_len, slot_util=eng.slot_utilization,
+    ))
+    log.info("fws-pipeline d=%d: %s", cfg.d_model, obs_lib.kv(
+        sim_tok_s=rep.tokens_per_s,
+        steady_state_fps=rep.pipeline.steady_state_fps,
+        stage_occupancy=rep.pipeline.stage_utilization,
+        bubble=rep.pipeline.bubble_fraction,
+        fill_latency_us=rep.pipeline.fill_latency_s * 1e6,
+        analog_util=rep.pipeline.analog_utilization,
+        digital_util=rep.pipeline.digital_utilization,
+    ))
+    host = obs.request_summary()
+    if host["ttft_s"]:
+        log.info("host-latency: %s", obs_lib.kv(
+            ttft_p50_ms=host["ttft_s"]["p50"] * 1e3,
+            ttft_p99_ms=host["ttft_s"]["p99"] * 1e3,
+            token_p50_ms=(host["token_latency_s"] or {}).get("p50", 0) * 1e3,
+            queue_p99_ms=(host["queue_wait_s"] or {}).get("p99", 0) * 1e3,
+        ))
+    log.info("sim-latency: %s", obs_lib.kv(
+        p50_us=lat[len(lat) // 2] * 1e6, max_us=lat[-1] * 1e6
+    ))
     for rid in sorted(out)[:4]:
-        print(f"  rid {rid}: {out[rid]}")
+        log.debug("rid %d: %s", rid, out[rid])
+    _finish_metrics(args, obs, log)
 
 
 def serve_vision(args, cfg_full):
@@ -142,6 +221,9 @@ def serve_vision(args, cfg_full):
     from repro.hwmodel import specs as S
     from repro.models import vit
     from repro.serving.vision import VisionEngine
+
+    log = obs_lib.get_logger("repro.serve", args.log_level)
+    obs = _mk_obs(args)
 
     # --tiny keeps the paper's token geometry (patch grid, layers, chips)
     # and shrinks only the width, so the measured traffic still reproduces
@@ -153,9 +235,9 @@ def serve_vision(args, cfg_full):
     )
     params, ctx = build_backend(
         args, cfg, params, batches=batches, forward_fn=vit.forward,
-        mxfp4_min_n=args.cim_min_n,
+        mxfp4_min_n=args.cim_min_n, obs=obs,
     )
-    eng = VisionEngine(params, cfg, ctx)
+    eng = VisionEngine(params, cfg, ctx, obs=obs)
     frames = jax.random.normal(
         jax.random.PRNGKey(1),
         (args.frames, cfg.image_size, cfg.image_size, cfg.in_channels),
@@ -163,22 +245,25 @@ def serve_vision(args, cfg_full):
     t0 = time.time()
     labels = eng.stream(frames)
     dt = time.time() - t0
-    print(
-        f"{cfg.name} [{args.backend}] vision-stream: {len(labels)} frames "
-        f"({cfg.seq_len} tokens each) in {dt:.2f}s wall "
-        f"({len(labels) / dt:.1f} fps host); top-1 = {labels}"
+    log.info(
+        "%s [%s] vision-stream: %s", cfg.name, args.backend,
+        obs_lib.kv(frames=len(labels), tokens_each=cfg.seq_len, wall_s=dt,
+                   fps_host=len(labels) / dt, top1=labels),
     )
     workload = cfg_full.name if cfg_full.name in S.WORKLOADS else None
     rep = eng.fws_report(workload=workload)
-    line = (
-        f"  FWS pipeline ({rep.chips} chip(s), d={rep.d_model}, "
-        f"N={rep.n_tokens}): {rep.fps:.0f} fps steady-state, "
-        f"frame latency {rep.frame_latency_s * 1e6:.1f}us"
+    rep.publish(obs.registry)
+    fields = dict(
+        chips=rep.chips, d=rep.d_model, n_tokens=rep.n_tokens,
+        fps=rep.fps, frame_latency_us=rep.frame_latency_s * 1e6,
+        stage_occupancy=rep.pipeline.stage_utilization,
+        bubble=rep.pipeline.bubble_fraction,
     )
     if rep.paper_fps:
-        line += (f" | paper Table 7: {rep.paper_fps} fps "
-                 f"({100 * rep.fps_error:.2f}% err)")
-    print(line)
+        fields.update(paper_fps=rep.paper_fps,
+                      err_pct=100 * rep.fps_error)
+    log.info("fws-pipeline: %s", obs_lib.kv(**fields))
+    _finish_metrics(args, obs, log)
 
 
 def main():
@@ -221,7 +306,29 @@ def main():
                     choices=("prefill", "decode"))
     ap.add_argument("--frames", type=int, default=4,
                     help="synthetic frame count for vision (--model vit-*)")
+    # ----------------------------------------------------- observability
+    ap.add_argument("--metrics-out", default=None,
+                    help="write a JSON metrics snapshot here (plus the "
+                         "Prometheus text exposition at the same path "
+                         "with a .prom suffix)")
+    ap.add_argument("--profile", action="store_true",
+                    help="capture eager kernel wall clock (named scopes "
+                         "are always on; this adds block_until_ready "
+                         "serialization, so it is off by default)")
+    ap.add_argument("--log-level", default="info", choices=obs_lib.log.LEVELS
+                    if hasattr(obs_lib, "log") else
+                    ("debug", "info", "warning", "error"),
+                    help="structured log verbosity (debug: one line per "
+                         "engine step)")
+    ap.add_argument("--log-every", type=int, default=16,
+                    help="info-level progress summary every N engine steps")
+    ap.add_argument("--slo-ttft-ms", type=float, default=None,
+                    help="TTFT p99 SLO target in ms (host wall)")
+    ap.add_argument("--slo-token-ms", type=float, default=None,
+                    help="per-token latency p99 SLO target in ms")
     args = ap.parse_args()
+
+    log = obs_lib.get_logger("repro.serve", args.log_level)
 
     if args.arch in C.VISION_ARCHS:
         serve_vision(args, C.VISION_ARCHS[args.arch])
@@ -230,11 +337,12 @@ def main():
     cfg = C.tiny(C.ARCHS[args.arch]) if args.tiny else C.ARCHS[args.arch]
     if not cfg.supports_decode:
         raise SystemExit(f"{cfg.name} is encoder-only; no decode")
+    obs = _mk_obs(args)
     params, _ = lm.init_model(jax.random.PRNGKey(0), cfg)
-    params, ctx = build_backend(args, cfg, params)
+    params, ctx = build_backend(args, cfg, params, obs=obs)
 
     if args.serve_trace:
-        serve_trace(args, cfg, params, ctx)
+        serve_trace(args, cfg, params, ctx, obs)
         return
 
     max_len = args.prompt_len + args.tokens
@@ -254,16 +362,27 @@ def main():
 
     step = jax.jit(lambda p, c, i, pos: lm.decode_step(p, cfg, ctx, i, pos, c))
     t0, outs = time.time(), [ids]
+    tok_hist = obs.registry.histogram(
+        "serve_token_latency_seconds", "inter-token decode gap (host wall)"
+    )
+    t_prev = time.perf_counter()
     for t in range(args.tokens - 1):
         logits, caches = step(params, caches, ids,
                               jnp.int32(args.prompt_len + t))
         ids = jnp.argmax(logits.astype(jnp.float32), -1)[:, None]
+        ids.block_until_ready()
+        now = time.perf_counter()
+        tok_hist.observe(now - t_prev)
+        t_prev = now
         outs.append(ids)
     dt = time.time() - t0
-    print(f"{cfg.name} [{args.backend}]: decoded "
-          f"{(args.tokens - 1) * args.batch} tokens "
-          f"in {dt:.2f}s; ids[0] = "
-          f"{jnp.concatenate(outs, 1)[0].tolist()}")
+    log.info(
+        "%s [%s] greedy decode: %s", cfg.name, args.backend,
+        obs_lib.kv(tokens=(args.tokens - 1) * args.batch, wall_s=dt,
+                   token_p50_ms=tok_hist.quantile(0.5) * 1e3,
+                   ids0=jnp.concatenate(outs, 1)[0].tolist()),
+    )
+    _finish_metrics(args, obs, log)
 
 
 if __name__ == "__main__":

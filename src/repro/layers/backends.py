@@ -219,7 +219,8 @@ class _MXFP4WeightOnly(LinearBackend):
             from repro.kernels.mxfp4_matmul import ops as mmops
 
             return mmops.mxfp4_matmul(
-                x, params["codes"], params["exps"], interpret=ctx.interpret
+                x, params["codes"], params["exps"], interpret=ctx.interpret,
+                obs=ctx.obs,
             )
         w = _dequant_packed(params["codes"], params["exps"])
         return jnp.matmul(x.astype(jnp.bfloat16), w)
@@ -272,7 +273,7 @@ class _CIMAnalog(LinearBackend):
             from repro.kernels.cim_linear import ops as cim_ops
 
             y = cim_ops.cim_linear(
-                x, w, calib, cfg=cfg, interpret=ctx.interpret
+                x, w, calib, cfg=cfg, interpret=ctx.interpret, obs=ctx.obs
             )
         else:
             y, _ = cimlib.cim_linear(x, w, cfg, calib)

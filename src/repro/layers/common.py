@@ -142,6 +142,12 @@ class RunCtx:
     # must never be closed over as a static value.
     paged_rows: Any = None
     paged_buffers: int = 0  # DMA ring depth override for the paged kernel (0: auto)
+    # Telemetry handle (repro.obs.Obs), threaded into the kernel ops
+    # wrappers: named profiling scopes + dispatch counters, and — only
+    # with obs.profile=True — eager wall-clock capture. None keeps the
+    # bare named scopes (zero runtime cost). Host-side Python object:
+    # only ever closed over, never traced.
+    obs: Any = None
 
     def act(self, x, *axes):
         return self.shd.act(x, *axes)

@@ -1,0 +1,40 @@
+"""Serving telemetry subsystem (pure Python host-side, no new deps).
+
+- :mod:`repro.obs.registry` — counters / gauges / fixed-bucket
+  histograms with p50/p90/p99 quantile extraction, grouped into
+  Prometheus-style metric families.
+- :mod:`repro.obs.tracing` — the :class:`Obs` handle the serving
+  engines emit typed lifecycle events through (enqueue -> admitted ->
+  prefill/first-token -> decode steps -> finish/evict), yielding TTFT,
+  queue-wait, per-token latency, occupancy and eviction metrics; the
+  old ``(kind, rids, n_tokens)`` tuple trace is a derived view.
+- :mod:`repro.obs.profile` — named kernel timing scopes
+  (``jax.named_scope`` + ``jax.profiler.TraceAnnotation``) with
+  optional eager wall-clock capture behind ``Obs.profile``.
+- :mod:`repro.obs.export` — Prometheus text exposition + JSON snapshot
+  writers (and the parser the round-trip test uses).
+- :mod:`repro.obs.slo` — configurable TTFT / per-token latency targets
+  scored over finished-request spans.
+- :mod:`repro.obs.fidelity` — ``sqnr_db`` (folded in from
+  ``repro.core.metrics``, which re-exports for compatibility).
+"""
+
+from repro.obs.export import (  # noqa: F401
+    parse_prometheus,
+    to_json,
+    to_prometheus,
+    write_metrics,
+)
+from repro.obs.fidelity import sqnr_db  # noqa: F401
+from repro.obs.log import get_logger, kv  # noqa: F401
+from repro.obs.profile import profiled_call  # noqa: F401
+from repro.obs.registry import (  # noqa: F401
+    LATENCY_BUCKETS_S,
+    RATIO_BUCKETS,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+)
+from repro.obs.slo import SLOTargets, evaluate_slo  # noqa: F401
+from repro.obs.tracing import Obs, RequestMetrics, StepEvent  # noqa: F401

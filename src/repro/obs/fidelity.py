@@ -1,0 +1,17 @@
+"""Shared fidelity metrics (numpy-only; no jax import at module load).
+
+Home of ``sqnr_db`` — previously ``repro.core.metrics``, which now
+re-exports from here for compatibility."""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def sqnr_db(ref, test) -> float:
+    """Signal-to-quantization-noise ratio in dB (f64 accumulation)."""
+    ref = np.asarray(ref, np.float64)
+    err = np.asarray(test, np.float64) - ref
+    return float(
+        10 * np.log10((ref**2).mean() / max((err**2).mean(), 1e-30))
+    )

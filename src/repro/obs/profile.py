@@ -1,0 +1,54 @@
+"""Kernel profiling hooks: named timing scopes + optional wall capture.
+
+Every kernel ops wrapper (``cim_linear``, ``mxfp4_matmul``,
+``flash_attention``, ``paged_attention``) routes its dispatch through
+:func:`profiled_call`:
+
+- ``jax.named_scope`` always wraps the call, so the kernel shows up as a
+  named region in HLO metadata and the jax profiler's trace viewer —
+  this is trace-time-only and costs nothing at runtime.
+- With an :class:`Obs` handle attached (``RunCtx.obs``), dispatches are
+  additionally counted (``kernel_calls_total{kernel=,mode=}``) and
+  bracketed with ``jax.profiler.TraceAnnotation`` for host-side TraceMe
+  events.
+- With ``obs.profile=True`` (the ``--profile`` flag; off by default),
+  eager calls also capture wall clock via ``block_until_ready`` into
+  the ``kernel_wall_seconds{kernel=}`` histogram. Inside a ``jax.jit``
+  trace the result is an abstract tracer — blocking is impossible and
+  meaningless — so traced calls only count (``mode="traced"``) and the
+  op-level profile comes from the named scopes via the jax profiler.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def _is_tracer(x) -> bool:
+    return isinstance(x, jax.core.Tracer)
+
+
+def profiled_call(name: str, obs, fn):
+    """Run ``fn()`` under a named kernel scope; see module docstring."""
+    if obs is None or not obs.enabled:
+        with jax.named_scope(f"repro/{name}"):
+            return fn()
+    t0 = time.perf_counter()
+    with jax.named_scope(f"repro/{name}"), \
+            jax.profiler.TraceAnnotation(f"repro/{name}"):
+        out = fn()
+    traced = _is_tracer(out)
+    obs.registry.counter(
+        "kernel_calls_total", "kernel wrapper dispatches",
+        labels={"kernel": name, "mode": "traced" if traced else "eager"},
+    ).inc()
+    if obs.profile and not traced:
+        jax.block_until_ready(out)
+        obs.registry.histogram(
+            "kernel_wall_seconds",
+            "eager kernel wall time (dispatch -> ready; --profile only)",
+            labels={"kernel": name},
+        ).observe(time.perf_counter() - t0)
+    return out

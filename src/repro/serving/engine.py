@@ -15,9 +15,13 @@ backend (float / mxfp4 / cim) because the steps just call
 ``lm.forward``/``lm.decode_step`` with whatever converted params + RunCtx
 the caller built (see ``launch/serve.py::build_backend``).
 
-The engine also records an event trace — (kind, rids, n_tokens) per
-scheduled step — that ``serving/pipeline.py`` maps onto the twelve-stage
-FWS pipeline for simulated latency/throughput reporting.
+Telemetry: the engine emits typed lifecycle events through a
+``repro.obs.Obs`` handle — enqueue -> admitted -> prefill/first-token ->
+per-decode-step -> finish/evict — yielding per-request TTFT, queue-wait,
+per-token latency, occupancy and eviction metrics. The old ad-hoc
+``(kind, rids, n_tokens)`` tuple trace survives as the derived
+``Engine.trace`` view, which ``serving/pipeline.py`` maps onto the
+twelve-stage FWS pipeline for simulated latency/throughput reporting.
 """
 
 from __future__ import annotations
@@ -30,6 +34,7 @@ import numpy as np
 
 from repro.layers import attention as attn_mod
 from repro.models import lm
+from repro.obs import Obs
 from repro.serving import pipeline as pipe_mod
 from repro.serving.kvcache import PagedKVCache, gather_rows, scatter_rows
 from repro.serving.scheduler import Request, Scheduler
@@ -51,21 +56,22 @@ class EngineConfig:
 
 
 class Engine:
-    def __init__(self, params, cfg, ctx, ecfg: EngineConfig = EngineConfig()):
+    def __init__(self, params, cfg, ctx, ecfg: EngineConfig = EngineConfig(),
+                 obs: Obs | None = None):
         if ecfg.prefill_len > ecfg.page_len:
             raise ValueError("prefill_len must fit in a page")
         self.params = params
         self.cfg = cfg
         self.ctx = ctx
         self.ecfg = ecfg
+        self.obs = obs if obs is not None else Obs()
         # hybrid / fully-digital MXFP4 SDPA: the pool keeps K/V codes
         # resident so decode quantization is O(1) in cache length
         self.kv = PagedKVCache(cfg, ecfg.num_slots, ecfg.lanes, ecfg.page_len,
                                mx_digital=ctx.hybrid_digital_sdpa,
                                layout=ecfg.kv_layout)
-        self.sched = Scheduler(ecfg.lanes, ecfg.policy)
+        self.sched = Scheduler(ecfg.lanes, ecfg.policy, obs=self.obs)
         self.requests: dict[int, Request] = {}
-        self.trace: list = []  # (kind, rids, n_tokens) per scheduled step
         self._next_rid = 0
         self._step_idx = 0
         self._prefill, self._decode = self._build_steps()
@@ -134,6 +140,7 @@ class Engine:
                       stop_token=stop_token, arrival=self._step_idx)
         self.requests[rid] = req
         self.sched.add(req)
+        self.obs.request_enqueued(rid, n_prompt=len(prompt))
         return rid
 
     def step(self) -> list:
@@ -143,9 +150,11 @@ class Engine:
         if action == "idle":
             return []
         self._step_idx += 1
-        if action == "prefill":
-            return self._run_prefill()
-        return self._run_decode()
+        done = (self._run_prefill() if action == "prefill"
+                else self._run_decode())
+        self.obs.lanes_state(len(self.sched.waiting), self.sched.num_active,
+                             self.kv.num_free)
+        return done
 
     def run(self, max_steps: int = 100_000) -> dict:
         """Drive until every queued request completes. Returns
@@ -158,17 +167,24 @@ class Engine:
             raise RuntimeError(f"engine did not drain in {max_steps} steps")
         return {rid: list(r.out) for rid, r in self.requests.items()}
 
+    @property
+    def trace(self) -> list:
+        """Derived view: the classic (kind, rids, n_tokens) tuple list
+        the pipeline model consumes, rebuilt from the typed step events
+        (``self.obs.steps``)."""
+        return self.obs.legacy_trace()
+
     def trace_report(self) -> pipe_mod.TraceReport:
         """Map the recorded schedule onto the FWS pipeline model."""
         return pipe_mod.simulate_trace(
-            self.trace, self.cfg.d_model, self.ecfg.lanes
+            self.obs.steps, self.cfg.d_model, self.ecfg.lanes
         )
 
     @property
     def slot_utilization(self) -> float:
         """Mean fraction of decode lanes doing live work (vs parked)."""
-        decodes = [len(rids) for kind, rids, _ in self.trace
-                   if kind == "decode"]
+        decodes = [len(e.rids) for e in self.obs.steps
+                   if e.kind == "decode"]
         if not decodes:
             return 1.0
         return sum(decodes) / (self.ecfg.lanes * len(decodes))
@@ -176,8 +192,10 @@ class Engine:
     # ----------------------------------------------------------- internals
 
     def _run_prefill(self) -> list:
+        t0 = self.obs.clock()
         slot = self.kv.allocator.alloc()
         req = self.sched.admit(slot, self._step_idx)
+        self.obs.request_admitted(req.rid)
         n = len(req.prompt)
         p = self.ecfg.prefill_len
         ids = np.zeros((1, p), np.int32)
@@ -189,11 +207,14 @@ class Engine:
             jnp.asarray(positions), jnp.asarray([slot], jnp.int32),
             jnp.int32(n - 1),
         )
-        req.out.append(int(tok))
-        self.trace.append(("prefill", (req.rid,), n))
+        req.out.append(int(tok))  # device sync: the step is complete here
+        t1 = self.obs.clock()
+        self.obs.step_recorded("prefill", (req.rid,), n, t0, t1)
+        self.obs.token_emitted(req.rid, t1)  # prefill emits the first token
         return self._retire([req])
 
     def _run_decode(self) -> list:
+        t0 = self.obs.clock()
         ecfg = self.ecfg
         rows = np.asarray(
             [self.kv.scratch_row(i) for i in range(ecfg.lanes)], np.int32
@@ -209,20 +230,25 @@ class Engine:
             self.params, self.kv.pool, jnp.asarray(rows), jnp.asarray(ids),
             jnp.asarray(pos),
         )
-        next_ids = np.asarray(next_ids)
+        next_ids = np.asarray(next_ids)  # device sync
+        t1 = self.obs.clock()
         for lane, req in active:
             req.out.append(int(next_ids[lane]))
             req.pos += 1
-        self.trace.append(
-            ("decode", tuple(r.rid for _, r in active), len(active))
+            self.obs.token_emitted(req.rid, t1)
+        self.obs.step_recorded(
+            "decode", tuple(r.rid for _, r in active), len(active), t0, t1,
+            lanes=ecfg.lanes,
         )
         return self._retire([r for _, r in active])
 
     def _retire(self, reqs) -> list:
         done = []
         for req in reqs:
-            if Scheduler.stopped(req, self.ecfg.page_len):
+            reason = Scheduler.stop_reason(req, self.ecfg.page_len)
+            if reason is not None:
                 self.sched.finish(req, self._step_idx)
                 self.kv.allocator.free(req.slot)
+                self.obs.request_finished(req.rid, reason)
                 done.append(req)
         return done

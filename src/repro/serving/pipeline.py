@@ -66,6 +66,47 @@ class PipelineReport:
     fps: float  # jobs drained / makespan
     steady_state_fps: float  # tail-window throughput (pipeline full)
 
+    @property
+    def bubble_fraction(self) -> float:
+        """Idle (bubble) fraction of a compute stage over the makespan —
+        the complement of ``stage_utilization``: fill/drain ramps and
+        host-side admission gaps show up here."""
+        return max(0.0, 1.0 - self.stage_utilization)
+
+    @property
+    def fill_latency_s(self) -> float:
+        """Time for the first job to traverse the empty pipeline (stage
+        depth x stage time + hops) — the pipeline-fill cost every burst
+        pays once."""
+        if not self.timings:
+            return 0.0
+        t0 = self.timings[0]
+        return t0.finish - t0.start
+
+    def publish(self, registry, prefix: str = "pipeline") -> None:
+        """Export stage occupancy / bubble / fill-latency gauges into a
+        ``repro.obs.MetricsRegistry``."""
+        g = registry.gauge
+        g(f"{prefix}_stage_occupancy",
+          "busy fraction of one FWS compute stage").set(
+            self.stage_utilization)
+        g(f"{prefix}_bubble_fraction",
+          "idle (bubble) fraction of one FWS compute stage").set(
+            self.bubble_fraction)
+        g(f"{prefix}_analog_utilization",
+          "analog busy fraction within stage busy time").set(
+            self.analog_utilization)
+        g(f"{prefix}_digital_utilization",
+          "digital busy fraction within stage busy time").set(
+            self.digital_utilization)
+        g(f"{prefix}_fill_latency_seconds",
+          "first job through the empty pipeline").set(self.fill_latency_s)
+        g(f"{prefix}_steady_state_fps",
+          "tail-window drain rate with the pipeline full").set(
+            self.steady_state_fps)
+        g(f"{prefix}_makespan_seconds", "simulated makespan").set(
+            self.makespan)
+
 
 def simulate(jobs: list, d_model: int, n_stages: int = N_STAGES,
              warmup: int | None = None, chips: int = 1) -> PipelineReport:
@@ -126,17 +167,41 @@ class TraceReport:
     tokens_per_s: float  # generated tokens drained / makespan
     lane_utilization: float  # live lanes / (lanes * decode steps)
 
+    def publish(self, registry, prefix: str = "pipeline") -> None:
+        """Export the pipeline gauges plus trace-level throughput and the
+        simulated per-request latency histogram into a registry."""
+        self.pipeline.publish(registry, prefix=prefix)
+        registry.gauge(
+            f"{prefix}_tokens_per_s",
+            "generated tokens drained per simulated second",
+        ).set(self.tokens_per_s)
+        registry.gauge(
+            f"{prefix}_lane_utilization",
+            "live lanes / (lanes * decode steps)",
+        ).set(self.lane_utilization)
+        h = registry.histogram(
+            f"{prefix}_sim_request_latency_seconds",
+            "simulated request latency (prefill entry -> last token out)",
+        )
+        for v in self.request_latency.values():
+            h.observe(v)
+
 
 def simulate_trace(events: list, d_model: int, lanes: int,
                    n_stages: int = N_STAGES) -> TraceReport:
     """Map an engine event trace onto the pipeline.
 
-    ``events``: list of (kind, rids, n_tokens) — kind 'prefill' (one
-    request's padded prompt) or 'decode' (one token for each rid; for the
+    ``events``: list of (kind, rids, n_tokens) tuples or typed
+    ``repro.obs.StepEvent`` records — kind 'prefill' (one request's
+    padded prompt) or 'decode' (one token for each rid; for the
     static-batching reference n_tokens may exceed len(rids): dead lanes
     still occupy the hardware). Jobs all arrive at t=0 back-to-back — the
     host scheduler is assumed to keep the pipeline fed.
     """
+    events = [
+        (e.kind, e.rids, e.n_tokens) if hasattr(e, "kind") else e
+        for e in events
+    ]
     jobs = [Job(0.0, n, (kind, rids)) for kind, rids, n in events]
     rep = simulate(jobs, d_model, n_stages)
     first_in: dict = {}

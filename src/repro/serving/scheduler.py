@@ -48,14 +48,26 @@ class Request:
 
 
 class Scheduler:
-    def __init__(self, lanes: int, policy: str = "prefill"):
+    def __init__(self, lanes: int, policy: str = "prefill", obs=None):
         if policy not in ("prefill", "decode"):
             raise ValueError(f"unknown scheduling policy {policy!r}")
         self.lanes = lanes
         self.policy = policy
+        self.obs = obs  # repro.obs.Obs handle (None: no telemetry)
         self.waiting: deque[Request] = deque()
         self.running: dict[int, Request] = {}  # lane -> request
         self._free_lanes = list(range(lanes - 1, -1, -1))
+
+    def _gauges(self) -> None:
+        if self.obs is None or not self.obs.enabled:
+            return
+        reg = self.obs.registry
+        reg.gauge("serve_queue_depth", "waiting requests").set(
+            len(self.waiting)
+        )
+        reg.gauge("serve_active_lanes", "lanes decoding live work").set(
+            len(self.running)
+        )
 
     # ------------------------------------------------------------- queries
 
@@ -72,15 +84,24 @@ class Scheduler:
         can_admit = bool(self.waiting) and bool(self._free_lanes) \
             and free_slots > 0
         if can_admit and (self.policy == "prefill" or not self.running):
-            return "prefill"
-        if self.running:
-            return "decode"
-        return "idle"
+            action = "prefill"
+        elif self.running:
+            action = "decode"
+        else:
+            action = "idle"
+        if self.obs is not None and self.obs.enabled:
+            self.obs.registry.counter(
+                "serve_sched_decisions_total",
+                "scheduler plan() outcomes by action",
+                labels={"action": action, "policy": self.policy},
+            ).inc()
+        return action
 
     # ----------------------------------------------------------- mutation
 
     def add(self, req: Request) -> None:
         self.waiting.append(req)
+        self._gauges()
 
     def admit(self, slot: int, step: int) -> Request:
         """Pop the next waiting request onto a free lane with KV slot
@@ -91,6 +112,7 @@ class Scheduler:
         req.pos = len(req.prompt)
         req.prefill_step = step
         self.running[req.lane] = req
+        self._gauges()
         return req
 
     def finish(self, req: Request, step: int) -> None:
@@ -99,15 +121,26 @@ class Scheduler:
         req.finish_step = step
         del self.running[req.lane]
         self._free_lanes.append(req.lane)
+        self._gauges()
 
     @staticmethod
-    def stopped(req: Request, page_len: int) -> bool:
-        return (
-            len(req.out) >= req.max_new
-            or (req.stop_token is not None and req.out
-                and req.out[-1] == req.stop_token)
-            or req.pos >= page_len
-        )
+    def stop_reason(req: Request, page_len: int) -> str | None:
+        """Why the request stops now, or None if it keeps decoding:
+        ``max_new`` (token budget reached), ``stop_token`` (sampled the
+        per-request stop id), ``page_exhausted`` (KV page full — the
+        eviction case)."""
+        if len(req.out) >= req.max_new:
+            return "max_new"
+        if (req.stop_token is not None and req.out
+                and req.out[-1] == req.stop_token):
+            return "stop_token"
+        if req.pos >= page_len:
+            return "page_exhausted"
+        return None
+
+    @classmethod
+    def stopped(cls, req: Request, page_len: int) -> bool:
+        return cls.stop_reason(req, page_len) is not None
 
 
 def static_batching_plan(requests: list[Request], lanes: int):

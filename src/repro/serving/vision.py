@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as obs_mod
 from repro.hwmodel import specs as S
 from repro.models import vit
 from repro.serving import pipeline as pipe_mod
@@ -51,6 +52,20 @@ class VisionReport:
             return None
         return abs(self.fps - self.paper_fps) / self.paper_fps
 
+    def publish(self, registry, prefix: str = "pipeline") -> None:
+        """Export the FWS pipeline gauges plus the vision-specific frame
+        latency (and paper cross-check, when present) into a registry."""
+        self.pipeline.publish(registry, prefix=prefix)
+        registry.gauge(
+            f"{prefix}_frame_latency_seconds",
+            "one frame through the full (multi-chip) pipeline",
+        ).set(self.frame_latency_s)
+        if self.paper_fps:
+            registry.gauge(
+                f"{prefix}_paper_fps_error",
+                "relative error vs the paper's Table 7 row",
+            ).set(self.fps_error)
+
 
 class VisionEngine:
     """Fixed-shape single-stream frame engine over the backend registry.
@@ -60,12 +75,14 @@ class VisionEngine:
     whatever converted params + RunCtx the caller built.
     """
 
-    def __init__(self, params, cfg: vit.ViTConfig, ctx, chips: int | None = None):
+    def __init__(self, params, cfg: vit.ViTConfig, ctx, chips: int | None = None,
+                 obs=None):
         self.params = params
         self.cfg = cfg
         self.ctx = ctx
         self.chips = chips or cfg.chips
-        self.trace: list[int] = []  # n_tokens per streamed frame
+        self.obs = obs if obs is not None else obs_mod.Obs()
+        self._next_fid = 0
         if self.chips == 1:
             self._chain = [(
                 jax.jit(lambda p, img: vit.forward(p, cfg, ctx,
@@ -88,13 +105,27 @@ class VisionEngine:
 
     def classify_frame(self, image: jax.Array) -> int:
         """One frame [H, W, C] through the chip chain; returns the top-1
-        class and records the frame's stage traffic."""
+        class and records the frame's stage traffic as a typed event."""
+        t0 = self.obs.clock()
         x = jnp.asarray(image)[None]  # fixed shape [1, H, W, C]
         for fn, chip_params, _ in self._chain:
             x = fn(chip_params, x)  # hidden handoff == inter-chip hop
         logits = np.asarray(jax.device_get(x), np.float32)[0]
-        self.trace.append(self.cfg.seq_len)
+        fid = self._next_fid
+        self._next_fid += 1
+        self.obs.step_recorded("frame", (fid,), self.cfg.seq_len,
+                               t0, self.obs.clock())
+        if self.obs.enabled:
+            self.obs.registry.counter(
+                "vision_frames_total", "frames streamed"
+            ).inc()
         return int(logits.argmax())
+
+    @property
+    def trace(self) -> list:
+        """Derived view: n_tokens per streamed frame (the measured stage
+        traffic), rebuilt from the typed frame events."""
+        return [e.n_tokens for e in self.obs.steps if e.kind == "frame"]
 
     def stream(self, frames) -> list[int]:
         """Stream frames ([N, H, W, C] or iterable of [H, W, C]) one at a

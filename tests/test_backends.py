@@ -141,7 +141,7 @@ def test_interpret_flag_threads_into_kernels(monkeypatch):
         seen["mm"] = interpret
         return jnp.zeros((x.shape[0], codes.shape[-1]), jnp.bfloat16)
 
-    def fake_cim(x, w, calib, cfg=None, interpret=None):
+    def fake_cim(x, w, calib, cfg=None, interpret=None, **kw):
         seen["cim"] = interpret
         return jnp.zeros((x.shape[0], w.codes.shape[1]), jnp.float32)
 

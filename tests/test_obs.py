@@ -1,0 +1,286 @@
+"""Telemetry subsystem invariants (host-side; no models).
+
+Crux checks: the Prometheus text exposition round-trips through the
+repo's own parser bit-for-bit in value space (the tier-1 exporter
+acceptance), histogram quantiles are sane under the fixed-bucket
+estimator, the span tracer derives the legacy trace view exactly, and
+``profiled_call`` distinguishes eager dispatches (wall captured under
+``profile=True``) from traced ones (counted only).
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import obs
+from repro.obs import export as export_mod
+from repro.obs.registry import RATIO_BUCKETS
+
+
+# ------------------------------------------------------------- registry
+
+def test_counter_monotonic():
+    r = obs.MetricsRegistry()
+    c = r.counter("c_total", "help")
+    c.inc()
+    c.inc(2.5)
+    assert c.value == 3.5
+    with pytest.raises(ValueError):
+        c.inc(-1)
+
+
+def test_gauge_set_inc_dec():
+    g = obs.MetricsRegistry().gauge("g", "")
+    g.set(4)
+    g.inc()
+    g.dec(2)
+    assert g.value == 3.0
+
+
+def test_registry_type_conflict_raises():
+    r = obs.MetricsRegistry()
+    r.counter("m", "")
+    with pytest.raises(ValueError):
+        r.gauge("m", "")
+
+
+def test_registry_label_series_distinct():
+    r = obs.MetricsRegistry()
+    a = r.counter("m_total", "", labels={"k": "a"})
+    b = r.counter("m_total", "", labels={"k": "b"})
+    a.inc(3)
+    b.inc(5)
+    assert (a.value, b.value) == (3, 5)
+    # same label set -> same series object
+    assert r.counter("m_total", "", labels={"k": "a"}) is a
+
+
+def test_histogram_quantiles_uniform():
+    h = obs.Histogram(buckets=tuple(float(i) for i in range(1, 101)))
+    for i in range(1, 101):
+        h.observe(i - 0.5)
+    assert h.count == 100
+    assert h.quantile(0.5) == pytest.approx(50, abs=1.0)
+    assert h.quantile(0.99) == pytest.approx(99, abs=1.0)
+    # clamped to observed extremes: no bucket-edge extrapolation
+    assert h.quantile(0.0) >= h.min
+    assert h.quantile(1.0) <= h.max
+    p = h.percentiles()
+    assert set(p) == {"p50", "p90", "p99"}
+
+
+def test_histogram_empty_and_overflow():
+    h = obs.Histogram(buckets=(1.0, 2.0))
+    assert h.quantile(0.5) == 0.0
+    h.observe(100.0)  # lands in +Inf bucket
+    assert h.counts[-1] == 1
+    assert h.quantile(0.99) == pytest.approx(100.0)
+    with pytest.raises(ValueError):
+        h.quantile(1.5)
+
+
+def test_histogram_rejects_bad_buckets():
+    with pytest.raises(ValueError):
+        obs.Histogram(buckets=(2.0, 1.0))
+
+
+# ------------------------------------------------------------ exporters
+
+def _populated_registry():
+    r = obs.MetricsRegistry()
+    r.counter("serve_requests_total", "requests in").inc(7)
+    r.gauge("serve_queue_depth", "waiting").set(3)
+    r.counter("steps_total", "by kind", labels={"kind": "decode"}).inc(4)
+    r.counter("steps_total", "by kind", labels={"kind": "prefill"}).inc(2)
+    h = r.histogram("serve_ttft_seconds", "ttft")
+    for v in (1e-4, 2e-4, 5e-3, 0.1):
+        h.observe(v)
+    occ = r.histogram("occupancy", "ratio", buckets=RATIO_BUCKETS)
+    occ.observe(0.75)
+    r.gauge("weird", 'help with "quotes"\nand newline',
+            labels={"path": 'a"b\\c'}).set(1.5)
+    return r
+
+
+def test_prometheus_round_trip():
+    r = _populated_registry()
+    text = export_mod.to_prometheus(r)
+    samples = export_mod.parse_prometheus(text)
+    assert samples[("serve_requests_total", ())] == 7
+    assert samples[("serve_queue_depth", ())] == 3
+    assert samples[("steps_total", (("kind", "decode"),))] == 4
+    assert samples[("serve_ttft_seconds_count", ())] == 4
+    assert samples[("serve_ttft_seconds_sum", ())] == pytest.approx(0.1053)
+    assert samples[("weird", (("path", 'a"b\\c'),))] == 1.5
+    # cumulative buckets: monotone, +Inf equals _count
+    lad = sorted(
+        (float("inf") if dict(ls)["le"] == "+Inf" else float(dict(ls)["le"]),
+         v)
+        for (name, ls), v in samples.items()
+        if name == "serve_ttft_seconds_bucket"
+    )
+    counts = [v for _, v in lad]
+    assert counts == sorted(counts)
+    assert counts[-1] == 4
+
+
+def test_prometheus_exposition_format_lines():
+    text = export_mod.to_prometheus(_populated_registry())
+    assert "# TYPE serve_requests_total counter" in text
+    assert "# TYPE serve_ttft_seconds histogram" in text
+    assert '_bucket{le="+Inf"} 4' in text
+
+
+def test_json_snapshot_and_write(tmp_path):
+    r = _populated_registry()
+    snap = export_mod.to_json(r, extra={"slo": {"pass": True}})
+    assert snap["slo"]["pass"] is True
+    fam = snap["metrics"]["serve_ttft_seconds"]
+    assert fam["type"] == "histogram"
+    s = fam["series"][0]
+    assert s["count"] == 4 and "p99" in s and "buckets" in s
+
+    import json
+
+    jp, pp = obs.write_metrics(r, str(tmp_path / "m.json"))
+    assert pp.endswith(".prom")
+    reloaded = json.load(open(jp))
+    assert reloaded["metrics"]["serve_queue_depth"]["series"][0]["value"] == 3
+    assert export_mod.parse_prometheus(open(pp).read())[
+        ("serve_requests_total", ())
+    ] == 7
+
+
+# ------------------------------------------------------------ span tracer
+
+def _fake_clock():
+    t = [0.0]
+
+    def clock():
+        t[0] += 0.01
+        return t[0]
+
+    return clock
+
+
+def test_obs_request_lifecycle_metrics():
+    o = obs.Obs(clock=_fake_clock())
+    o.request_enqueued(0, n_prompt=5, t=1.0)
+    o.request_admitted(0, t=1.5)
+    o.token_emitted(0, t=2.0)   # first token -> ttft
+    o.token_emitted(0, t=2.25)  # inter-token gap
+    o.request_finished(0, reason="max_new", t=3.0)
+    [r] = o.finished
+    assert r.queue_wait_s == pytest.approx(0.5)
+    assert r.ttft_s == pytest.approx(1.0)
+    assert r.e2e_s == pytest.approx(2.0)
+    assert r.token_intervals_s == [pytest.approx(0.25)]
+    assert o.registry.histogram("serve_ttft_seconds").count == 1
+    assert o.registry.histogram("serve_token_latency_seconds").count == 1
+    summ = o.request_summary()
+    assert summ["n_requests"] == 1 and summ["n_tokens"] == 2
+    assert summ["finish_reasons"] == {"max_new": 1}
+
+
+def test_obs_eviction_counted():
+    o = obs.Obs()
+    o.request_enqueued(3)
+    o.request_finished(3, reason="page_exhausted")
+    assert o.registry.counter("serve_evictions_total").value == 1
+
+
+def test_obs_legacy_trace_derived():
+    o = obs.Obs()
+    o.step_recorded("prefill", (0,), 8, 0.0, 1.0)
+    o.step_recorded("decode", (0, 1), 2, 1.0, 1.5, lanes=4)
+    assert o.legacy_trace() == [("prefill", (0,), 8), ("decode", (0, 1), 2)]
+    assert o.steps[1].wall_s == pytest.approx(0.5)
+    o.reset()
+    assert o.legacy_trace() == []
+
+
+def test_obs_disabled_keeps_steps_skips_registry():
+    o = obs.Obs(enabled=False)
+    o.request_enqueued(0)
+    o.step_recorded("decode", (0,), 1, 0.0, 0.1, lanes=4)
+    o.token_emitted(0)
+    o.request_finished(0)
+    assert len(o.steps) == 1  # pipeline-model input survives
+    assert o.registry.families() == []  # no metric work
+    assert o.finished == []
+
+
+# ------------------------------------------------------------------- slo
+
+def test_slo_pass_fail_and_violations():
+    reqs = []
+    for i in range(10):
+        r = obs.RequestMetrics(rid=i, t_enqueue=0.0)
+        r.t_first_token = 0.010 if i else 0.500  # one slow outlier
+        r.token_times = [r.t_first_token, r.t_first_token + 0.002]
+        r.t_finish = r.token_times[-1]
+        reqs.append(r)
+    ok = obs.evaluate_slo(reqs, obs.SLOTargets(ttft_p99_s=1.0))
+    assert ok["pass"] is True and ok["violations"]["ttft_over_p99_target"] == 0
+    bad = obs.evaluate_slo(reqs, obs.SLOTargets(ttft_p99_s=0.1))
+    assert bad["pass"] is False
+    assert bad["violations"]["ttft_over_p99_target"] == 1
+    assert bad["checks"]["ttft_p99_s"]["ok"] is False
+
+
+def test_slo_no_samples_is_indeterminate_not_failing():
+    res = obs.evaluate_slo([], obs.SLOTargets(ttft_p99_s=0.1))
+    assert res["checks"]["ttft_p99_s"]["ok"] is None
+    assert res["pass"] is True
+
+
+# -------------------------------------------------------- kernel profiling
+
+def test_profiled_call_eager_capture():
+    o = obs.Obs(profile=True)
+    out = obs.profiled_call("k", o, lambda: jnp.ones((4,)) * 2)
+    assert float(out[0]) == 2.0
+    calls = o.registry.counter(
+        "kernel_calls_total", labels={"kernel": "k", "mode": "eager"}
+    )
+    assert calls.value == 1
+    wall = o.registry.histogram("kernel_wall_seconds",
+                                labels={"kernel": "k"})
+    assert wall.count == 1 and wall.sum > 0
+
+
+def test_profiled_call_traced_counts_only():
+    o = obs.Obs(profile=True)
+
+    @jax.jit
+    def f(x):
+        return obs.profiled_call("k2", o, lambda: x * 2)
+
+    f(jnp.ones((4,)))
+    calls = o.registry.counter(
+        "kernel_calls_total", labels={"kernel": "k2", "mode": "traced"}
+    )
+    assert calls.value == 1
+    # no wall capture inside a trace: blocking a tracer is impossible
+    wall = o.registry.histogram("kernel_wall_seconds",
+                                labels={"kernel": "k2"})
+    assert wall.count == 0
+
+
+def test_profiled_call_without_obs_is_passthrough():
+    assert float(obs.profiled_call("k3", None, lambda: jnp.float32(7))) == 7
+
+
+# ------------------------------------------------------------- fidelity
+
+def test_sqnr_reexport_compat():
+    from repro.core.metrics import sqnr_db as legacy
+    from repro.obs import sqnr_db
+
+    assert legacy is sqnr_db
+    assert sqnr_db([1.0, 2.0], [1.0, 2.0]) > 200  # exact match -> cap
+    assert sqnr_db([1.0, 0.0], [0.0, 0.0]) == pytest.approx(
+        10 * math.log10(0.5 / 0.5)
+    )

@@ -494,3 +494,109 @@ def test_trace_report_continuous_vs_static(float_model):
     # static batching wastes lanes on the tail of every group
     assert static.lane_utilization < 1.0
     assert eng.slot_utilization > static.lane_utilization
+
+
+# ----------------------------------------------- simulate_trace edge cases
+
+def test_simulate_trace_empty():
+    rep = pipe.simulate_trace([], CFG.d_model, lanes=3)
+    assert rep.request_latency == {}
+    assert rep.tokens_per_s == 0.0
+    assert rep.pipeline.makespan == 0.0
+    assert rep.pipeline.bubble_fraction == 1.0
+    assert rep.pipeline.fill_latency_s == 0.0
+    assert rep.lane_utilization == 1.0  # no decode steps -> vacuous
+
+
+def test_simulate_trace_single_event():
+    rep = pipe.simulate_trace([("prefill", (0,), 8)], CFG.d_model, lanes=3)
+    assert set(rep.request_latency) == {0}
+    # one job alone: latency == full pipe traversal == fill latency
+    assert rep.request_latency[0] == pytest.approx(
+        rep.pipeline.fill_latency_s
+    )
+    assert rep.tokens_per_s > 0
+
+
+def test_simulate_trace_evicted_before_finish():
+    # rid 1 is evicted after one decode step (no further events); its
+    # latency still closes at the drain of the last job that carried it
+    events = [
+        ("prefill", (0,), 8),
+        ("prefill", (1,), 8),
+        ("decode", (0, 1), 2),
+        ("decode", (0,), 1),
+        ("decode", (0,), 1),
+    ]
+    rep = pipe.simulate_trace(events, CFG.d_model, lanes=3)
+    assert set(rep.request_latency) == {0, 1}
+    assert rep.request_latency[1] < rep.request_latency[0]
+    assert all(v > 0 for v in rep.request_latency.values())
+
+
+def test_simulate_trace_accepts_step_events():
+    from repro.obs import StepEvent
+
+    tuples = [("prefill", (0,), 4), ("decode", (0,), 1)]
+    typed = [StepEvent(k, r, n, 0.0, 0.0) for k, r, n in tuples]
+    a = pipe.simulate_trace(tuples, CFG.d_model, lanes=2)
+    b = pipe.simulate_trace(typed, CFG.d_model, lanes=2)
+    assert a.request_latency == b.request_latency
+    assert a.tokens_per_s == b.tokens_per_s
+
+
+# ------------------------------------------------------- engine telemetry
+
+def test_engine_emits_request_spans_and_metrics(float_model):
+    from repro import obs as obs_lib
+
+    params, ctx = float_model
+    rng = np.random.default_rng(7)
+    reqs = [
+        (rng.integers(0, CFG.vocab_size, size=rng.integers(2, 8)).tolist(),
+         int(rng.integers(2, 6)))
+        for _ in range(4)
+    ]
+    eng, _, out = _staggered_run(params, ctx, reqs)
+    o = eng.obs
+    # every request finished with a full span: ttft < e2e, tokens counted
+    assert len(o.finished) == len(reqs)
+    for r in o.finished:
+        assert r.t_admitted is not None and r.ttft_s > 0
+        assert r.e2e_s >= r.ttft_s
+        assert r.n_generated == len(out[r.rid])
+    # the derived legacy view matches Engine.trace and feeds the pipeline
+    assert eng.trace == o.legacy_trace()
+    assert {e.kind for e in o.steps} == {"prefill", "decode"}
+    reg = o.registry
+    assert reg.counter("serve_requests_total").value == len(reqs)
+    assert reg.histogram("serve_ttft_seconds").count == len(reqs)
+    n_tok = sum(len(v) for v in out.values())
+    assert reg.counter("serve_tokens_generated_total").value == n_tok
+    finished = reg.counter("serve_requests_finished_total",
+                           labels={"reason": "max_new"})
+    assert finished.value == len(reqs)
+    # trace_report still works off the typed record
+    rep = eng.trace_report()
+    assert set(rep.request_latency) == set(out)
+
+
+def test_engine_disabled_obs_matches_default_trace(float_model):
+    from repro import obs as obs_lib
+
+    params, ctx = float_model
+    ecfg = EngineConfig(lanes=2, num_slots=2, page_len=16, prefill_len=8)
+    prompt = [3, 1, 4, 1, 5]
+    eng_on = Engine(params, CFG, ctx, ecfg)
+    eng_off = Engine(params, CFG, ctx, ecfg,
+                     obs=obs_lib.Obs(enabled=False))
+    for eng in (eng_on, eng_off):
+        eng.add_request(list(prompt), max_new=3)
+    assert eng_on.run()[0] == eng_off.run()[0]
+    # the step record (pipeline-model input) is identical either way...
+    assert eng_off.trace == eng_on.trace
+    assert eng_off.slot_utilization == eng_on.slot_utilization
+    # ...but the disabled side did no registry or span work
+    assert eng_off.obs.registry.families() == []
+    assert eng_off.obs.finished == []
+    assert len(eng_on.obs.finished) == 1
