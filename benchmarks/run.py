@@ -277,6 +277,136 @@ def hybrid_backend_tiny_lm():
 
 
 @bench
+def fidelity_sweep():
+    """Numerical-fidelity observability sweep (the ``--fidelity`` serving
+    pass in batch form): per-layer SQNR, quantizer/ADC health and drift
+    verdicts on the tiny LM and tiny ViT across execution variants —
+    digital MXFP4 vs float, hybrid CIM vs its digital-matched reference,
+    lossless CIM (the exactness gate), and a deliberately mis-calibrated
+    hybrid (``adc_fs / 4``) that must trip the drift detector *and*
+    degrade SQNR in the same run. Also measures the probe's overhead
+    (instrumented eager pass vs the plain serving forward). Writes
+    BENCH_fidelity.json."""
+    import dataclasses
+    import json
+
+    from repro import configs as C
+    from repro import obs as obs_lib
+    from repro.layers.common import RunCtx, ShardingCtx
+    from repro.models import calibrate, lm, vit
+
+    LOSSLESS = cimlib.CIMConfig(adc_bits=None, cm_bits=64, two_pass=False)
+
+    def digest(rep):
+        lay = rep["layers"]
+        return {
+            "output_sqnr_db": rep["sqnr_db"].get("output"),
+            "sqnr_db": rep["sqnr_db"],
+            "n_drifted": rep["drift"]["n_drifted"],
+            "drifted": rep["drift"]["drifted"],
+            "max_clip_ratio": max(
+                (v.get("clip_ratio", 0.0) for v in lay.values()), default=0.0
+            ),
+            "max_adc_saturation_ratio": max(
+                (v.get("adc_saturation_ratio", 0.0) for v in lay.values()),
+                default=0.0,
+            ),
+            "layers": lay,
+        }
+
+    def sweep(cfg, init_fn, forward_fn, batches):
+        params, _ = init_fn(jax.random.PRNGKey(0), cfg)
+        ctx = RunCtx(shd=ShardingCtx(), dense_attn_max=256)
+        cim_cfg = cimlib.CIMConfig()
+        conv, calibs = calibrate.convert_model_cim(
+            params, cfg, ctx, batches, cim_cfg=cim_cfg, min_n=32,
+            forward_fn=forward_fn,
+        )
+        conv_ll, _ = calibrate.convert_model_cim(
+            params, cfg, ctx, batches, cim_cfg=LOSSLESS, min_n=32,
+            forward_fn=forward_fn,
+        )
+        batch = batches[0]
+
+        def one(tree, quant, ref_quant, run_ctx):
+            _, rep = obs_lib.run_fidelity_pass(
+                params, tree, cfg, run_ctx, batch,
+                forward_fn=forward_fn, ref_quant=ref_quant, quant=quant,
+            )
+            return rep
+
+        hyb_ctx = dataclasses.replace(ctx, quant="cim", cim=cim_cfg)
+        out = {"analog_linears": len(calibs), "variants": {}}
+        # digital MXFP4 vs bf16 float: total quantization error
+        out["variants"]["mxfp4"] = digest(one(params, "mxfp4_digital",
+                                              "none", ctx))
+        # hybrid CIM vs its digital-matched reference: analog-stack noise
+        t0 = time.time()
+        rep_cim = one(conv, "cim", "mxfp4_digital", hyb_ctx)
+        on_s = time.time() - t0
+        out["variants"]["cim"] = digest(rep_cim)
+        # lossless CIM: must match digital MXFP4 (the CI exactness gate)
+        out["variants"]["cim_lossless"] = digest(one(
+            conv_ll, "cim", "mxfp4_digital",
+            dataclasses.replace(ctx, quant="cim", cim=LOSSLESS),
+        ))
+        # shrunken adc_fs: drift verdicts + degraded SQNR, correlated
+        out["variants"]["cim_miscal"] = digest(one(
+            obs_lib.scale_adc_fs(conv, 0.25), "cim", "mxfp4_digital",
+            hyb_ctx,
+        ))
+        # probe overhead: instrumented eager pass (two forwards + health
+        # probes) vs the plain serving forward it rides alongside
+        jax.block_until_ready(forward_fn(conv, cfg, hyb_ctx, batch))  # warm
+        t0 = time.time()
+        jax.block_until_ready(forward_fn(conv, cfg, hyb_ctx, batch))
+        off_s = time.time() - t0
+        out["overhead"] = {
+            "fidelity_off_ms": off_s * 1e3,
+            "fidelity_on_ms": on_s * 1e3,
+            "ratio": on_s / max(off_s, 1e-9),
+        }
+        return out
+
+    lm_cfg = C.tiny(C.ARCHS["h2o-danube-1.8b"])
+    lm_batches = calibrate.calibration_batches(
+        lm_cfg, n_batches=2, batch=2, seq=16
+    )
+    vit_cfg = C.geometry_tiny_vit(C.VISION_ARCHS["vit-b16"])
+    vit_batches = vit.calibration_images(vit_cfg, n_batches=2, batch=1)
+
+    result = {
+        "meta": _run_meta(),
+        "models": {
+            "tiny_lm": sweep(lm_cfg, lm.init_model, lm.forward, lm_batches),
+            "tiny_vit": sweep(vit_cfg, vit.init_model, vit.forward,
+                              vit_batches),
+        },
+    }
+    lmr = result["models"]["tiny_lm"]["variants"]
+    result["gate"] = {
+        # CI fidelity gate inputs: lossless hybrid must stay essentially
+        # exact and calibrated traffic must never read as drifted
+        "lm_lossless_output_sqnr_db": lmr["cim_lossless"]["output_sqnr_db"],
+        "lm_cim_n_drifted": lmr["cim"]["n_drifted"],
+        "lm_miscal_n_drifted": lmr["cim_miscal"]["n_drifted"],
+        "lm_analog_linears": result["models"]["tiny_lm"]["analog_linears"],
+    }
+    with open("BENCH_fidelity.json", "w") as f:
+        json.dump(result, f, indent=1)
+    g = result["gate"]
+    ov = result["models"]["tiny_lm"]["overhead"]
+    return (
+        f"lossless {g['lm_lossless_output_sqnr_db']:.0f} dB, hybrid "
+        f"{lmr['cim']['output_sqnr_db']:.1f} dB / drift "
+        f"{g['lm_cim_n_drifted']}, miscal "
+        f"{lmr['cim_miscal']['output_sqnr_db']:.1f} dB / drift "
+        f"{g['lm_miscal_n_drifted']}/{g['lm_analog_linears']}; probe "
+        f"{ov['ratio']:.0f}x eager -> BENCH_fidelity.json"
+    )
+
+
+@bench
 def serving_engine_tiny_lm():
     """Continuous-batching serving engine vs naive static batching: tiny
     full-attention LM, staggered synthetic requests with mixed lengths.
@@ -910,6 +1040,7 @@ def main(argv=None) -> None:
         fig7_adc_sweep,
         table6_accuracy_tiny_model,
         hybrid_backend_tiny_lm,
+        fidelity_sweep,
         serving_engine_tiny_lm,
         vit_fws_pipeline,
         backend_latency,

@@ -337,6 +337,95 @@ def calibrate_rowhist(
     return LayerCalib(e_n=e_n, adc_fs=fs)
 
 
+# ------------------------------------------------- fidelity observability
+
+def adc_health(c: jax.Array, fs, bits: int | None, code_buckets: tuple = ()):
+    """ADC occupancy stats for one pass's pre-ADC column sums ``c``
+    (aligned-integer units): how much of the n-bit code range traffic
+    actually uses, and how often it runs off the end.
+
+    - ``saturated``: samples whose ideal code ``round(c/delta)`` falls
+      outside ``[-half, half]`` — i.e. |c| genuinely beyond full scale.
+      A sample at exactly +fs rounds to ``half`` and is clipped one LSB
+      by :func:`_adc` (the two's-complement asymmetric endpoint); that
+      is quantization error, not saturation, and counting it would make
+      every Row-Hist-calibrated layer (full scale == batch max) read as
+      saturating on its own calibration data;
+    - ``occ_*``: |clipped code| / half in [0, 1], bucketed on
+      ``code_buckets`` for ``Histogram.merge_counts`` (plus sum/min/max);
+    - ``peak``: max |c| — compare against the calibrated full scale for
+      headroom.
+    """
+    peak = jnp.max(jnp.abs(c))
+    n = c.size  # static under jit
+    if bits is None:  # ADC model disabled: nothing saturates, no codes
+        z = jnp.int32(0)
+        return {
+            "total": n, "saturated": z, "peak": peak,
+            "occ_counts": jnp.zeros((len(code_buckets) + 1,), jnp.int32),
+            "occ_sum": jnp.float32(0.0), "occ_n": 0,
+            "occ_min": jnp.float32(0.0), "occ_max": jnp.float32(0.0),
+        }
+    half = 2.0 ** (bits - 1)
+    raw = jnp.round(c / (fs / half))
+    occ = jnp.abs(jnp.clip(raw, -half, half - 1.0)) / half
+    return {
+        "total": n,
+        "saturated": jnp.sum((raw < -half) | (raw > half)),
+        "peak": peak,
+        "occ_counts": mxlib.bucket_counts(occ, code_buckets),
+        "occ_sum": jnp.sum(occ),
+        "occ_n": n,
+        "occ_min": jnp.min(occ),
+        "occ_max": jnp.max(occ),
+    }
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "code_buckets"))
+def cim_linear_fidelity(
+    x: jax.Array,
+    w: MXW,
+    cfg: CIMConfig,
+    calib: LayerCalib,
+    code_buckets: tuple = (),
+):
+    """Instrumented Row-Hist forward: ``y`` is bitwise :func:`cim_linear`
+    (same ``_xq_blocks`` / ``_scan_blocks`` / ``_adc`` composition —
+    ``collect_stats`` only adds the count accumulator), plus the health
+    stats the fidelity probe publishes:
+
+    - ``counts``: int32 [4] (overflow, underflow_p1, underflow_p2,
+      live blocks) from the CM alignment window;
+    - ``pass1`` / ``pass2``: :func:`adc_health` per ADC pass;
+    - ``live_fs``: max |column sum| across passes — the quantity Row-Hist
+      calibration maximises, so ``live_fs > calib.adc_fs`` means traffic
+      has drifted beyond the calibration set;
+    - ``live_e_max``: max live block-output exponent (vs ``calib.e_n``).
+
+    Only the offline-calibrated ``row_hist`` strategy (the serving hot
+    path) is supported.
+    """
+    assert cfg.strategy == "row_hist" and calib is not None
+    cx, ex, _ = _xq_blocks(x, w.codes.shape[0])
+    c1, c2, cnt = _scan_blocks(
+        cx, ex, w, calib.e_n, dataclasses.replace(cfg, collect_stats=True)
+    )
+    y = _adc(c1, calib.adc_fs, cfg.adc_bits) * _en_scale(calib.e_n) * 0.25
+    if cfg.two_pass:
+        y = y + (
+            _adc(c2, calib.adc_fs, cfg.adc_bits)
+            * _en_scale(calib.e_n, cfg.cm_bits) * 0.25
+        )
+    h1 = adc_health(c1, calib.adc_fs, cfg.adc_bits, code_buckets)
+    stats = {"counts": cnt, "pass1": h1, "live_fs": h1["peak"],
+             "live_e_max": _calib_max_exponent(x, w)}
+    if cfg.two_pass:
+        h2 = adc_health(c2, calib.adc_fs, cfg.adc_bits, code_buckets)
+        stats["pass2"] = h2
+        stats["live_fs"] = jnp.maximum(h1["peak"], h2["peak"])
+    return y.astype(jnp.float32), stats
+
+
 # ------------------------------------------------- bias-column equivalence
 
 def cim_linear_unsigned(x: jax.Array, w: MXW, cfg: CIMConfig, calib: LayerCalib):

@@ -1,5 +1,7 @@
-"""Compatibility shim: ``sqnr_db`` moved to ``repro.obs.fidelity``
-(the telemetry namespace); import from ``repro.obs`` in new code."""
+"""Compatibility shim: ``sqnr_db`` lives in ``repro.obs.fidelity``, the
+numerical-fidelity observability module (per-layer SQNR tracing, MXFP4 /
+ADC health probes, calibration-drift detection); import from
+``repro.obs`` in new code."""
 
 from __future__ import annotations
 

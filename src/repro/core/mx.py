@@ -365,6 +365,65 @@ def _fqa_bwd(axis, _, g):
 fake_quant_axis.defvjp(_fqa_fwd, _fqa_bwd)
 
 
+# ------------------------------------------------- fidelity observability
+
+def bucket_counts(v: jax.Array, buckets: tuple, weights: jax.Array | None = None):
+    """Bucket ``v`` on the boundaries ``buckets`` with the exact semantics
+    of ``Histogram.observe`` (``bisect_left``: a value equal to a boundary
+    lands in that ``le`` bucket; the implicit +Inf bucket catches the
+    tail). Returns int32 counts of length ``len(buckets) + 1`` ready for
+    ``Histogram.merge_counts``. ``weights`` (0/1) masks elements out."""
+    b = jnp.asarray(buckets, jnp.float32)
+    idx = jnp.searchsorted(b, v.astype(jnp.float32).ravel(), side="left")
+    w = (jnp.ones(idx.shape, jnp.int32) if weights is None
+         else weights.ravel().astype(jnp.int32))
+    return jnp.zeros((len(buckets) + 1,), jnp.int32).at[idx].add(w)
+
+
+@functools.partial(jax.jit, static_argnames=("exp_buckets",))
+def quant_health(x: jax.Array, exp_buckets: tuple = ()) -> dict:
+    """MXFP4 quantizer health over one tensor (last-axis blocks) — the
+    fidelity-observability companion to :func:`quantize`; never on the
+    hot path, the forward keeps calling :func:`quantize`/:func:`fake_quant`
+    untouched.
+
+    Reports, over the unpadded elements (padding is all-zero and zeros
+    are neither clipped nor counted as underflow):
+
+    - ``clipped``: values beyond the top of the E2M1 grid,
+      ``|x| > 6 * 2^E`` — saturated to max magnitude by the OCP clamp;
+    - ``underflow``: nonzero values flushed to code 0 by the shared
+      block exponent (the block amax set ``E`` too hot for them);
+    - ``total``: element count (static Python int);
+
+    plus the shared-exponent distribution over *live* (nonzero-amax)
+    blocks, bucketed on ``exp_buckets`` for ``Histogram.merge_counts``:
+    ``exp_counts`` / ``exp_sum`` / ``exp_n`` / ``exp_min`` / ``exp_max``.
+    """
+    xf = _pad_last(jnp.asarray(x).astype(jnp.float32))
+    shp = xf.shape
+    xb = xf.reshape(shp[:-1] + (shp[-1] // BLOCK, BLOCK))
+    code_mag, ebf = _quant_scaled(xb)
+    scale = exp2i(ebf - 129)  # 2^e_shared, exact
+    clipped = jnp.sum(jnp.abs(xb) > FP4_MAX * scale)
+    underflow = jnp.sum((xb != 0) & (code_mag == 0))
+
+    e = ebf[..., 0] - 129  # [..., nb] shared exponent per block
+    live = jnp.any(xb != 0, axis=-1)  # zero-amax blocks sit on the floor
+    n_live = jnp.sum(live)
+    big = jnp.int32(10**6)
+    return {
+        "total": int(np.prod(x.shape)),
+        "clipped": clipped,
+        "underflow": underflow,
+        "exp_counts": bucket_counts(e, exp_buckets, weights=live),
+        "exp_sum": jnp.sum(jnp.where(live, e, 0)),
+        "exp_n": n_live,
+        "exp_min": jnp.min(jnp.where(live, e, big)),
+        "exp_max": jnp.max(jnp.where(live, e, -big)),
+    }
+
+
 # ------------------------------------------------------------ bf16 helper
 
 def to_bf16(x: jax.Array) -> jax.Array:

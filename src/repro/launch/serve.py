@@ -18,6 +18,11 @@ exposition (``PATH`` with a ``.prom`` suffix). ``--profile`` turns on
 eager kernel wall-clock capture (named scopes are always on);
 ``--slo-ttft-ms`` / ``--slo-token-ms`` score the run against latency
 targets. ``--log-level`` controls the structured per-step log lines.
+``--fidelity`` adds a numerical-fidelity pass over the freshly built
+serving tree (per-layer SQNR vs the float reference, MXFP4 clip /
+underflow counters, ADC saturation + code-utilization histograms, and
+the calibration-drift check) before serving starts; the metrics land in
+the same ``--metrics-out`` snapshot.
 
 Local smoke:
   PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --tiny \
@@ -91,6 +96,32 @@ def build_backend(args, cfg, params, batches=None, forward_fn=None,
 
 def _mk_obs(args) -> obs_lib.Obs:
     return obs_lib.Obs(profile=args.profile)
+
+
+def _run_fidelity(args, cfg, fparams, params, ctx, obs, batch,
+                  forward_fn=None):
+    """``--fidelity``: one numerical-fidelity pass over the serving tree —
+    per-layer SQNR against the float tree, quantizer / ADC health
+    counters, and the calibration-drift check — published into the run's
+    metrics registry before the snapshot is written. For the cim backend
+    the reference runs on the digital MXFP4 path (the calibration-matched
+    distribution, isolating the analog stack's noise); the other backends
+    reference bf16 float, measuring total quantization error."""
+    log = obs_lib.get_logger("repro.serve", args.log_level)
+    ref_quant = "mxfp4_digital" if args.backend == "cim" else "none"
+    t0 = time.time()
+    _, rep = obs_lib.run_fidelity_pass(
+        fparams, params, cfg, ctx, batch,
+        obs=obs, forward_fn=forward_fn,
+        ref_quant=ref_quant, quant=ctx.quant, min_n=args.cim_min_n,
+    )
+    log.info("fidelity: %s", obs_lib.kv(
+        layers=len(rep["layers"]),
+        output_sqnr_db=rep["sqnr_db"].get("output"),
+        drifted=rep["drift"]["n_drifted"],
+        wall_s=time.time() - t0,
+    ))
+    return rep
 
 
 def _finish_metrics(args, obs: obs_lib.Obs, log) -> None:
@@ -229,14 +260,17 @@ def serve_vision(args, cfg_full):
     # and shrinks only the width, so the measured traffic still reproduces
     # Table 7; --no-tiny runs the full-size model.
     cfg = C.geometry_tiny_vit(cfg_full) if args.tiny else cfg_full
-    params, _ = vit.init_model(jax.random.PRNGKey(0), cfg)
+    fparams, _ = vit.init_model(jax.random.PRNGKey(0), cfg)
     batches = vit.calibration_images(
         cfg, n_batches=args.calib_batches, batch=args.batch
     )
     params, ctx = build_backend(
-        args, cfg, params, batches=batches, forward_fn=vit.forward,
+        args, cfg, fparams, batches=batches, forward_fn=vit.forward,
         mxfp4_min_n=args.cim_min_n, obs=obs,
     )
+    if args.fidelity:
+        _run_fidelity(args, cfg, fparams, params, ctx, obs, batches[0],
+                      forward_fn=vit.forward)
     eng = VisionEngine(params, cfg, ctx, obs=obs)
     frames = jax.random.normal(
         jax.random.PRNGKey(1),
@@ -311,6 +345,12 @@ def main():
                     help="write a JSON metrics snapshot here (plus the "
                          "Prometheus text exposition at the same path "
                          "with a .prom suffix)")
+    ap.add_argument("--fidelity", action="store_true",
+                    help="numerical-fidelity pass after the backend build: "
+                         "per-layer SQNR vs the float tree, MXFP4 clip/"
+                         "underflow + ADC saturation/code-utilization "
+                         "counters, calibration-drift check (eager; "
+                         "metrics land in --metrics-out)")
     ap.add_argument("--profile", action="store_true",
                     help="capture eager kernel wall clock (named scopes "
                          "are always on; this adds block_until_ready "
@@ -338,8 +378,14 @@ def main():
     if not cfg.supports_decode:
         raise SystemExit(f"{cfg.name} is encoder-only; no decode")
     obs = _mk_obs(args)
-    params, _ = lm.init_model(jax.random.PRNGKey(0), cfg)
-    params, ctx = build_backend(args, cfg, params, obs=obs)
+    fparams, _ = lm.init_model(jax.random.PRNGKey(0), cfg)
+    params, ctx = build_backend(args, cfg, fparams,
+                                mxfp4_min_n=args.cim_min_n, obs=obs)
+    if args.fidelity:
+        fb = calibrate.calibration_batches(
+            cfg, n_batches=1, batch=args.batch, seq=args.prompt_len
+        )[0]
+        _run_fidelity(args, cfg, fparams, params, ctx, obs, fb)
 
     if args.serve_trace:
         serve_trace(args, cfg, params, ctx, obs)

@@ -323,24 +323,46 @@ class ActivationTap:
     max_rows: int = 512
     records: dict = dataclasses.field(default_factory=dict)
     weights: dict = dataclasses.field(default_factory=dict)
+    # also capture at already-converted serving nodes (resident CIM codes
+    # or packed MXFP4) — the SQNR tracer runs the same tap over the
+    # converted tree and compares captures path-by-path against a float
+    # reference run; calibration keeps the default (float-only) gate
+    include_converted: bool = False
+
+    def _in_dim(self, params) -> int | None:
+        """Contraction dim of a capturable linear node, else None."""
+        if not isinstance(params, dict):
+            return None
+        w = params.get("w")
+        if getattr(w, "ndim", 0) == 2:
+            k, n = w.shape
+            return k if k % mxlib.BLOCK == 0 and n >= self.min_n else None
+        if not self.include_converted:
+            return None
+        c = params.get("codes")
+        if getattr(c, "ndim", 0) != 2:
+            return None
+        # cim_analog: int8 codes [K, N]; mxfp4_wonly: packed nibble pairs
+        # [K//2, N]
+        k = c.shape[0] * (1 if "e_n" in params else 2)
+        return k if c.shape[1] >= self.min_n else None
 
     def eligible(self, params) -> bool:
-        w = params.get("w") if isinstance(params, dict) else None
-        if getattr(w, "ndim", 0) != 2:
-            return False
-        k, n = w.shape
-        return k % mxlib.BLOCK == 0 and n >= self.min_n
+        return self._in_dim(params) is not None
 
     def record(self, path: str, params: dict, x: jax.Array) -> None:
-        if not self.eligible(params):
+        k = self._in_dim(params)
+        if k is None:
             return
-        k = params["w"].shape[0]
         xf = x.astype(jnp.float32).reshape(-1, k)
         if xf.shape[0] > self.max_rows:
+            # deterministic in shape: ref and instrumented runs of the
+            # same batch subsample identical rows, so captures compare
             idx = np.linspace(0, xf.shape[0] - 1, self.max_rows).astype(int)
             xf = jnp.take(xf, jnp.asarray(idx), axis=0)
         self.records.setdefault(path, []).append(xf)
-        self.weights[path] = params["w"]
+        if "w" in params:
+            self.weights[path] = params["w"]
 
 
 def calibrate_taps(

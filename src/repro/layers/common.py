@@ -148,14 +148,21 @@ class RunCtx:
     # bare named scopes (zero runtime cost). Host-side Python object:
     # only ever closed over, never traced.
     obs: Any = None
+    # Numerical-fidelity probe (repro.obs.FidelityProbe) during an eager
+    # instrumented run: per-layer MXFP4/ADC health keyed by the same
+    # scoped paths as calibration. Host-side Python object — only ever
+    # closed over, never traced; implies unrolled layer execution like an
+    # active tap. None (the default) leaves the hot path untouched.
+    fidelity: Any = None
 
     def act(self, x, *axes):
         return self.shd.act(x, *axes)
 
     def scoped(self, name: str) -> "RunCtx":
         """Extend the capture scope. No-op (returns self) unless an
-        ActivationTap is active, so traced paths never pay for it."""
-        if self.tap is None:
+        ActivationTap or FidelityProbe is active, so traced paths never
+        pay for it."""
+        if self.tap is None and self.fidelity is None:
             return self
         return dataclasses.replace(
             self, scope=f"{self.scope}/{name}" if self.scope else name
@@ -216,6 +223,9 @@ def linear_apply(
     if ctx.tap is not None and name is not None:
         path = f"{ctx.scope}/{name}" if ctx.scope else name
         ctx.tap.record(path, params, x)
+    if ctx.fidelity is not None and name is not None:
+        path = f"{ctx.scope}/{name}" if ctx.scope else name
+        ctx.fidelity.observe_linear(path, ctx, params, x)
     y = backends_lib.resolve_backend(ctx, params).forward(ctx, params, x)
     if "b" in params:
         y = y + params["b"].astype(y.dtype)

@@ -20,6 +20,7 @@ from __future__ import annotations
 import dataclasses
 
 import jax
+import numpy as np
 
 from repro.core import cim as cimlib
 from repro.layers import backends
@@ -64,6 +65,48 @@ def capture_rowhist_calibration(
     return backends.calibrate_taps(
         tap, cim_cfg or cimlib.CIMConfig(), wq_cache=wq_cache
     )
+
+
+def capture_linear_inputs(
+    params,
+    cfg,
+    ctx: RunCtx,
+    batch,
+    *,
+    quant: str | None = None,
+    min_n: int = 32,
+    max_rows: int = 512,
+    forward_fn=None,
+    fidelity=None,
+):
+    """One eager forward with an ``include_converted`` ActivationTap:
+    returns ``({param-tree path: float32 [rows, k] activations}, output)``
+    — the raw material of the per-layer SQNR tracer. Run it once on a
+    reference tree/backend and once on the instrumented one, then compare
+    captures path-by-path (``repro.obs.fidelity.sqnr_trace``); the tap's
+    row subsampling is deterministic in shape, so both runs keep identical
+    rows. Paths visited more than once (the Zamba shared block) record
+    multiple entries, concatenated here in visit order.
+
+    ``quant=None`` keeps ``ctx.quant``; pass a :class:`FidelityProbe` as
+    ``fidelity`` to collect quantizer/ADC health metrics in the same
+    forward instead of paying a second instrumented run.
+    """
+    forward_fn = forward_fn or lm.forward
+    tap = backends.ActivationTap(
+        min_n=min_n, max_rows=max_rows, include_converted=True
+    )
+    rep: dict = {"tap": tap, "scope": ""}
+    if quant is not None:
+        rep["quant"] = quant
+    if fidelity is not None:
+        rep["fidelity"] = fidelity
+    out = forward_fn(params, cfg, dataclasses.replace(ctx, **rep), batch)
+    caps = {
+        path: np.concatenate([np.asarray(a) for a in xs], axis=0)
+        for path, xs in tap.records.items()
+    }
+    return caps, out
 
 
 def convert_model_cim(

@@ -349,9 +349,9 @@ def _block_apply(ctx, cfg, seg: Segment, p, x, positions, cache, pos, shared,
         # shared-block params live under the top-level "shared" tree path,
         # so the capture scope resets (not appends) — every zshared call
         # taps the same resident weights, as in the physical array
-        sctx = ctx if ctx.tap is None else dataclasses.replace(
-            ctx, scope="shared"
-        )
+        sctx = ctx if (
+            ctx.tap is None and ctx.fidelity is None
+        ) else dataclasses.replace(ctx, scope="shared")
         h = linear_apply(sctx, shared["w_in"],
                          jnp.concatenate([x, x0], axis=-1), name="w_in")
         h, nc = attn_mod.attn_apply(sctx.scoped("attn"), seg.attn,
@@ -381,10 +381,11 @@ def _run_segment(ctx, cfg, seg: Segment, p, x, positions, cache, pos, shared, x0
         return _block_apply(ctx, cfg, seg, p, x, positions, cache, pos,
                             shared, x0, rope_tables)
 
-    if ctx.tap is not None or ctx.unroll_layers:
-        # calibration capture (each per-layer activation records under its
-        # own "L<j>" scope; scan would trace the tap callbacks away) or
-        # explicit unrolled execution for bitwise numerics comparisons
+    if ctx.tap is not None or ctx.fidelity is not None or ctx.unroll_layers:
+        # calibration capture / fidelity probing (each per-layer activation
+        # records under its own "L<j>" scope; scan would trace the host
+        # callbacks away) or explicit unrolled execution for bitwise
+        # numerics comparisons
         ncs = []
         for j in range(seg.n):
             pj = jax.tree.map(lambda a: a[j], p)

@@ -15,8 +15,12 @@
   writers (and the parser the round-trip test uses).
 - :mod:`repro.obs.slo` — configurable TTFT / per-token latency targets
   scored over finished-request spans.
-- :mod:`repro.obs.fidelity` — ``sqnr_db`` (folded in from
-  ``repro.core.metrics``, which re-exports for compatibility).
+- :mod:`repro.obs.fidelity` — numerical-fidelity observability:
+  ``sqnr_db`` / per-layer SQNR tracing, the :class:`FidelityProbe`
+  (MXFP4 clip/underflow counters, ADC saturation + code-utilization
+  histograms via ``RunCtx.fidelity``), and the calibration-drift
+  detector comparing live Row-Hist statistics against stored
+  ``LayerCalib``.
 """
 
 from repro.obs.export import (  # noqa: F401
@@ -25,10 +29,17 @@ from repro.obs.export import (  # noqa: F401
     to_prometheus,
     write_metrics,
 )
-from repro.obs.fidelity import sqnr_db  # noqa: F401
+from repro.obs.fidelity import (  # noqa: F401
+    FidelityProbe,
+    run_fidelity_pass,
+    scale_adc_fs,
+    sqnr_db,
+    sqnr_trace,
+)
 from repro.obs.log import get_logger, kv  # noqa: F401
 from repro.obs.profile import profiled_call  # noqa: F401
 from repro.obs.registry import (  # noqa: F401
+    EXP_BUCKETS,
     LATENCY_BUCKETS_S,
     RATIO_BUCKETS,
     Counter,

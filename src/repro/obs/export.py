@@ -34,6 +34,8 @@ def _escape(s: str) -> str:
 
 
 def _fmt_value(v: float) -> str:
+    if math.isnan(v):
+        return "NaN"  # Prometheus text-format spelling (zero-signal SQNR)
     if math.isinf(v):
         return "+Inf" if v > 0 else "-Inf"
     return repr(float(v))
@@ -96,7 +98,7 @@ def parse_prometheus(text: str) -> dict:
             key = (name, ())
             valstr = " " + valstr
         v = valstr.strip()
-        samples[key] = math.inf if v == "+Inf" else float(v)
+        samples[key] = math.inf if v == "+Inf" else float(v)  # float("NaN") ok
     return samples
 
 
@@ -121,10 +123,22 @@ def _unescape(s: str) -> str:
     )
 
 
+def _sanitize(obj):
+    """NaN -> None, recursively: ``json.dump`` would emit a bare ``NaN``
+    token (invalid strict JSON) for zero-signal SQNR gauges otherwise."""
+    if isinstance(obj, float) and math.isnan(obj):
+        return None
+    if isinstance(obj, dict):
+        return {k: _sanitize(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_sanitize(v) for v in obj]
+    return obj
+
+
 def to_json(registry: MetricsRegistry, extra: dict | None = None) -> dict:
-    out = {"metrics": registry.snapshot()}
+    out = {"metrics": _sanitize(registry.snapshot())}
     if extra:
-        out.update(extra)
+        out.update(_sanitize(extra))
     return out
 
 

@@ -1,17 +1,428 @@
-"""Shared fidelity metrics (numpy-only; no jax import at module load).
+"""Numerical-fidelity observability for the hybrid CIM stack.
 
-Home of ``sqnr_db`` — previously ``repro.core.metrics``, which now
-re-exports from here for compatibility."""
+Where the serving telemetry (``repro.obs.tracing``) watches *requests*,
+this module watches *numerics*: per-layer MXFP4 quantizer health (clip /
+underflow / block-exponent occupancy), ADC code utilization and
+saturation, per-layer SQNR against a reference forward, and a
+calibration-drift detector that compares live Row-Hist statistics
+against the stored :class:`~repro.core.cim.LayerCalib`.
+
+The :class:`FidelityProbe` attaches to ``RunCtx.fidelity`` and is called
+by ``layers.common.linear_apply`` with the same scoped param-tree paths
+Row-Hist calibration uses, so every metric is keyed by the layer it
+describes. Probes run *eagerly* with layers unrolled (the calibration-
+capture regime); the compiled hot path never sees any of this — with
+``fidelity=None`` (the default) the forward is bitwise unchanged.
+
+Module-load discipline: numpy-only (no jax import at module load) —
+device work is imported lazily inside the probe methods. Home of
+``sqnr_db`` — previously ``repro.core.metrics``, which now re-exports
+from here for compatibility.
+"""
 
 from __future__ import annotations
 
+import math
+
 import numpy as np
+
+from repro.obs.log import get_logger, kv
+from repro.obs.registry import EXP_BUCKETS, RATIO_BUCKETS
+
+# backends whose forward quantizes *activations* to MXFP4 — the ones the
+# quantizer-health counters describe (weight-only and float linears leave
+# activations untouched)
+_ACT_QUANT_BACKENDS = ("mxfp4_ste", "mxfp4_ste_prequant", "cim_analog")
+
+# Drift tolerances, both in *tail mass*. Row-Hist calibrates ``E_N`` at
+# the max live block-output exponent and ``adc_fs`` at the max |column
+# sum| over the calibration batches on the digital-matched path, so on
+# calibration traffic neither block overflow nor ADC saturation occurs
+# by construction — but the deployed hybrid feeds each layer activations
+# perturbed by upstream ADC quantization, so a thin tail of live samples
+# legitimately spills over (peaks overshoot full scale by up to ~25% and
+# exponents by one notch on deep stacks, yet the spilled *fraction*
+# stays under ~2% saturation / ~1% block overflow). Point verdicts on
+# peak statistics would therefore false-positive; the detector instead
+# reads tail mass against these tolerances, while the raw peak gauges
+# (``fidelity_drift_exp_margin`` / ``fidelity_drift_fs_ratio``) stay
+# published for dashboards. A genuinely mis-scaled layer lands far
+# beyond both (adc_fs/4 -> >10% of samples saturated per layer).
+SAT_DRIFT_TOL = 0.05
+OVF_DRIFT_TOL = 0.02
 
 
 def sqnr_db(ref, test) -> float:
-    """Signal-to-quantization-noise ratio in dB (f64 accumulation)."""
+    """Signal-to-quantization-noise ratio in dB (f64 accumulation).
+
+    Zero-signal ``ref`` returns ``nan`` (documented sentinel): with no
+    signal power the ratio is undefined, and dividing by the error floor
+    would report a misleadingly huge dB value. Exact matches cap at the
+    1e-30 error floor (> 200 dB)."""
     ref = np.asarray(ref, np.float64)
     err = np.asarray(test, np.float64) - ref
-    return float(
-        10 * np.log10((ref**2).mean() / max((err**2).mean(), 1e-30))
+    sig = float((ref**2).mean())
+    if sig == 0.0:
+        return float("nan")
+    return float(10 * np.log10(sig / max(float((err**2).mean()), 1e-30)))
+
+
+def sqnr_trace(ref_caps: dict, test_caps: dict) -> dict:
+    """Per-path SQNR between two activation captures (the dicts returned
+    by ``models.calibrate.capture_linear_inputs`` for a reference and an
+    instrumented run of the *same batch* — the tap's row subsampling is
+    deterministic in shape, so entries compare element-for-element)."""
+    out = {}
+    for path in sorted(ref_caps):
+        if path in test_caps and ref_caps[path].shape == test_caps[path].shape:
+            out[path] = sqnr_db(ref_caps[path], test_caps[path])
+    return out
+
+
+def scale_adc_fs(tree, factor: float, match: str | None = None):
+    """Copy of a cim-converted param tree with ``adc_fs`` leaves scaled by
+    ``factor`` — the deliberate mis-calibration used by tests and the
+    fidelity sweep to prove the saturation counters predict fidelity
+    loss. ``match`` restricts scaling to nodes whose tree path contains
+    the substring (stacked segments share one leaf per segment)."""
+
+    def rec(node, path):
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                if k == "adc_fs" and (match is None or match in path):
+                    out[k] = v * factor
+                else:
+                    out[k] = rec(v, f"{path}/{k}" if path else k)
+            return out
+        if isinstance(node, (list, tuple)):
+            return type(node)(
+                rec(v, f"{path}/{i}" if path else str(i))
+                for i, v in enumerate(node)
+            )
+        return node
+
+    return rec(tree, "")
+
+
+class FidelityProbe:
+    """Host-side per-layer numerical-fidelity recorder.
+
+    Attach via ``RunCtx.fidelity``; ``linear_apply`` calls
+    :meth:`observe_linear` with the calibration path name for every named
+    linear. Eager-only — fidelity runs execute with layers unrolled
+    exactly like calibration capture, and the probe raises on tracers
+    rather than silently recording garbage.
+
+    All publishing funnels through the owning :class:`~repro.obs.Obs`
+    handle and short-circuits when ``obs.enabled`` is ``False`` (the
+    PR 7 disabled-mode contract), so a disabled probe costs one attribute
+    check per linear.
+
+    Published metric families (all labelled ``{layer=<path>}``):
+
+    - ``fidelity_mxfp4_{values,clip,underflow}_total`` counters and the
+      derived ``fidelity_mxfp4_{clip,underflow}_ratio`` gauges;
+    - ``fidelity_block_exponent`` histogram (:data:`EXP_BUCKETS`);
+    - ``adc_{saturation,samples}_total{pass=1|2}`` counters,
+      ``adc_saturation_ratio`` / ``adc_fs_headroom`` gauges, and the
+      ``adc_code_utilization`` histogram (:data:`RATIO_BUCKETS`);
+    - ``fidelity_cim_{overflow,underflow}_ratio`` gauges (CM alignment);
+    - ``fidelity_sqnr_db`` gauges via :meth:`note_sqnr`;
+    - ``fidelity_drift_*`` via :meth:`drift_report`.
+    """
+
+    def __init__(self, obs=None, max_rows: int = 512):
+        if obs is None:
+            from repro.obs.tracing import Obs
+
+            obs = Obs()
+        self.obs = obs
+        self.max_rows = max_rows
+        self.records: dict = {}
+
+    @property
+    def registry(self):
+        return self.obs.registry
+
+    # ------------------------------------------------------ linear hook
+
+    def observe_linear(self, path: str, ctx, params, x) -> None:
+        if not self.obs.enabled:
+            return
+        import jax
+
+        if isinstance(x, jax.core.Tracer):
+            raise RuntimeError(
+                "FidelityProbe is eager-only: fidelity runs execute "
+                "unrolled outside jit (the calibration-capture regime); "
+                f"got a tracer at layer {path!r}"
+            )
+        import jax.numpy as jnp
+
+        from repro.core import mx as mxlib
+        from repro.layers import backends as backends_lib
+
+        if not isinstance(params, dict):
+            return
+        k = x.shape[-1]
+        if k % mxlib.BLOCK:
+            return
+        backend = backends_lib.resolve_backend(ctx, params).name
+        if backend not in _ACT_QUANT_BACKENDS:
+            return  # activations stay float: nothing to probe
+        xf = jnp.asarray(x).astype(jnp.float32).reshape(-1, k)
+        if xf.shape[0] > self.max_rows:
+            idx = np.linspace(0, xf.shape[0] - 1, self.max_rows).astype(int)
+            xf = jnp.take(xf, jnp.asarray(idx), axis=0)
+
+        lab = {"layer": path}
+        rec = self.records.setdefault(path, {})
+        self._observe_quant(lab, rec, xf, jax, mxlib)
+        if "e_n" in params:  # resident analog node: ADC + alignment stats
+            self._observe_cim(lab, rec, ctx, params, xf, jax, mxlib,
+                              backends_lib)
+
+    def _observe_quant(self, lab, rec, xf, jax, mxlib) -> None:
+        h = jax.device_get(mxlib.quant_health(xf, EXP_BUCKETS))
+        r = self.registry
+        total, clip, under = (
+            int(h["total"]), int(h["clipped"]), int(h["underflow"])
+        )
+        rec["act_total"] = rec.get("act_total", 0) + total
+        rec["act_clipped"] = rec.get("act_clipped", 0) + clip
+        rec["act_underflow"] = rec.get("act_underflow", 0) + under
+        r.counter("fidelity_mxfp4_values_total",
+                  "activation elements quantized", labels=lab).inc(total)
+        r.counter("fidelity_mxfp4_clip_total",
+                  "elements clipped to the E2M1 max magnitude",
+                  labels=lab).inc(clip)
+        r.counter("fidelity_mxfp4_underflow_total",
+                  "nonzero elements flushed to zero by the block exponent",
+                  labels=lab).inc(under)
+        t = max(rec["act_total"], 1)
+        r.gauge("fidelity_mxfp4_clip_ratio",
+                "cumulative clip fraction", labels=lab
+                ).set(rec["act_clipped"] / t)
+        r.gauge("fidelity_mxfp4_underflow_ratio",
+                "cumulative underflow fraction", labels=lab
+                ).set(rec["act_underflow"] / t)
+        r.histogram("fidelity_block_exponent",
+                    "shared block exponents of live blocks (E8M0, unbiased)",
+                    labels=lab, buckets=EXP_BUCKETS).merge_counts(
+            h["exp_counts"], h["exp_sum"], h["exp_n"],
+            h["exp_min"], h["exp_max"],
+        )
+
+    def _observe_cim(self, lab, rec, ctx, params, xf, jax, mxlib,
+                     backends_lib) -> None:
+        from repro.core import cim as cimlib
+
+        cfg = backends_lib.cim_config(ctx)
+        w = mxlib.MXW(params["codes"], params["exps"])
+        calib = cimlib.LayerCalib(e_n=params["e_n"], adc_fs=params["adc_fs"])
+        _, stats = cimlib.cim_linear_fidelity(
+            xf, w, cfg, calib, code_buckets=RATIO_BUCKETS
+        )
+        stats = jax.device_get(stats)
+        r = self.registry
+        for pname in ("1", "2"):
+            h = stats.get(f"pass{pname}")
+            if h is None:
+                continue
+            sat, n = int(h["saturated"]), int(h["total"])
+            rec["adc_saturated"] = rec.get("adc_saturated", 0) + sat
+            rec["adc_samples"] = rec.get("adc_samples", 0) + n
+            pl = dict(lab, **{"pass": pname})
+            r.counter("adc_saturation_total",
+                      "column sums clipped by the ADC range",
+                      labels=pl).inc(sat)
+            r.counter("adc_samples_total", "column sums through the ADC",
+                      labels=pl).inc(n)
+            r.histogram("adc_code_utilization",
+                        "|ADC code| / half-range occupancy",
+                        labels=lab, buckets=RATIO_BUCKETS).merge_counts(
+                h["occ_counts"], h["occ_sum"], h["occ_n"],
+                h["occ_min"], h["occ_max"],
+            )
+        r.gauge("adc_saturation_ratio",
+                "cumulative ADC saturation fraction (both passes)",
+                labels=lab).set(
+            rec.get("adc_saturated", 0) / max(rec.get("adc_samples", 0), 1)
+        )
+        # drift raw material: the live analogues of what Row-Hist stored
+        rec["e_n"] = int(params["e_n"])
+        rec["adc_fs"] = float(params["adc_fs"])
+        rec["live_fs"] = max(rec.get("live_fs", 0.0), float(stats["live_fs"]))
+        rec["live_e_max"] = max(rec.get("live_e_max", -(10**6)),
+                                int(stats["live_e_max"]))
+        r.gauge("adc_fs_headroom",
+                "calibrated full scale / live peak |column sum| (<1 means "
+                "traffic exceeds calibration)", labels=lab).set(
+            rec["adc_fs"] / rec["live_fs"] if rec["live_fs"] > 0
+            else math.inf
+        )
+        over, und1, und2, live = (int(c) for c in stats["counts"])
+        rec["blk_overflow"] = rec.get("blk_overflow", 0) + over
+        rec["blk_under1"] = rec.get("blk_under1", 0) + und1
+        rec["blk_under2"] = rec.get("blk_under2", 0) + und2
+        rec["blk_live"] = rec.get("blk_live", 0) + live
+        bl = max(rec["blk_live"], 1)
+        r.gauge("fidelity_cim_overflow_ratio",
+                "blocks shift-clamped above the CM window", labels=lab
+                ).set(rec["blk_overflow"] / bl)
+        r.gauge("fidelity_cim_underflow_ratio",
+                "blocks zeroed below the pass-2 CM window", labels=lab
+                ).set(rec["blk_under2"] / bl)
+
+    # ------------------------------------------------------ SQNR + drift
+
+    def note_sqnr(self, per_path: dict) -> None:
+        """Fold per-layer SQNR (from :func:`sqnr_trace`) into the records
+        and publish ``fidelity_sqnr_db{layer=...}`` gauges."""
+        if not self.obs.enabled:
+            return
+        for path, db in per_path.items():
+            self.records.setdefault(path, {})["sqnr_db"] = float(db)
+            self.registry.gauge(
+                "fidelity_sqnr_db",
+                "per-layer SQNR vs the reference forward",
+                labels={"layer": path},
+            ).set(float(db))
+
+    def drift_report(self, log=None, sat_tol: float = SAT_DRIFT_TOL,
+                     ovf_tol: float = OVF_DRIFT_TOL) -> dict:
+        """Compare live Row-Hist statistics against the stored per-layer
+        calibration and publish drift gauges. A layer has *drifted* when
+        live traffic exceeds what calibration provisioned for: more than
+        ``ovf_tol`` of its live blocks overflowed the stored ``E_N``, or
+        more than ``sat_tol`` of its ADC samples saturated (the full
+        scale no longer covers the live column sums). The verdicts read
+        tail mass — the peak statistics (``exp_margin`` / ``fs_ratio``)
+        stay published as raw gauges, see :data:`SAT_DRIFT_TOL` for why.
+        Self-consistent: Row-Hist calibrates at the max over the
+        calibration batches, so replaying those batches never fires.
+
+        Emits one structured warning per drifted layer and returns
+        ``{"layers": {...}, "drifted": [...], "n_drifted": int}``."""
+        if not self.obs.enabled:
+            return {"layers": {}, "drifted": [], "n_drifted": 0}
+        r = self.registry
+        layers: dict = {}
+        drifted: list = []
+        for path in sorted(self.records):
+            rec = self.records[path]
+            if "e_n" not in rec:
+                continue
+            exp_margin = rec["e_n"] - rec["live_e_max"]
+            fs_ratio = (rec["adc_fs"] / rec["live_fs"]
+                        if rec["live_fs"] > 0 else math.inf)
+            n = rec.get("adc_samples", 0)
+            sat_ratio = rec.get("adc_saturated", 0) / n if n else 0.0
+            live = rec.get("blk_live", 0)
+            ovf_ratio = rec.get("blk_overflow", 0) / live if live else 0.0
+            is_drifted = sat_ratio > sat_tol or ovf_ratio > ovf_tol
+            lab = {"layer": path}
+            r.gauge("fidelity_drift_exp_margin",
+                    "stored E_N minus live max block-output exponent "
+                    "(negative: drifted)", labels=lab).set(exp_margin)
+            r.gauge("fidelity_drift_fs_ratio",
+                    "calibrated ADC full scale / live peak (<1: drifted)",
+                    labels=lab).set(fs_ratio)
+            layers[path] = {
+                "exp_margin": exp_margin,
+                "fs_ratio": fs_ratio,
+                "sat_ratio": sat_ratio,
+                "ovf_ratio": ovf_ratio,
+                "drifted": is_drifted,
+            }
+            if is_drifted:
+                drifted.append(path)
+                r.counter("fidelity_drift_total",
+                          "layers whose live range exceeded calibration"
+                          ).inc()
+                (log or get_logger("repro.fidelity")).warning(
+                    "calibration drift: %s",
+                    kv(layer=path, exp_margin=exp_margin,
+                       fs_ratio=fs_ratio, sat_ratio=sat_ratio,
+                       ovf_ratio=ovf_ratio,
+                       e_n=rec["e_n"], live_e_max=rec["live_e_max"],
+                       adc_fs=rec["adc_fs"], live_fs=rec["live_fs"]),
+                )
+        return {"layers": layers, "drifted": drifted,
+                "n_drifted": len(drifted)}
+
+    def summary(self) -> dict:
+        """JSON-able per-layer digest of everything recorded so far."""
+        out: dict = {}
+        for path in sorted(self.records):
+            rec = self.records[path]
+            e: dict = {}
+            t = rec.get("act_total", 0)
+            if t:
+                e["clip_ratio"] = rec.get("act_clipped", 0) / t
+                e["underflow_ratio"] = rec.get("act_underflow", 0) / t
+            n = rec.get("adc_samples", 0)
+            if n:
+                e["adc_saturation_ratio"] = rec.get("adc_saturated", 0) / n
+            if "e_n" in rec:
+                e["exp_margin"] = rec["e_n"] - rec["live_e_max"]
+                e["fs_headroom"] = (rec["adc_fs"] / rec["live_fs"]
+                                    if rec["live_fs"] > 0 else math.inf)
+            if "sqnr_db" in rec:
+                e["sqnr_db"] = rec["sqnr_db"]
+            out[path] = e
+        return out
+
+
+def run_fidelity_pass(
+    ref_params,
+    params,
+    cfg,
+    ctx,
+    batch,
+    *,
+    obs=None,
+    probe: FidelityProbe | None = None,
+    forward_fn=None,
+    ref_quant: str = "mxfp4_digital",
+    quant: str = "cim",
+    min_n: int = 32,
+    max_rows: int = 512,
+) -> tuple:
+    """The full per-layer SQNR trace + health probe + drift check in two
+    eager forwards of one batch:
+
+    1. a *reference* forward of ``ref_params`` (the float tree) on the
+       ``ref_quant`` backend, capturing per-linear input activations;
+    2. an *instrumented* forward of ``params`` (the converted serving
+       tree) with a :class:`FidelityProbe` attached, capturing at the
+       same paths.
+
+    Per-path SQNR between the captures (plus the model output) publishes
+    as ``fidelity_sqnr_db{layer=...}``; the probe publishes quantizer /
+    ADC health; :meth:`FidelityProbe.drift_report` closes the pass.
+    Returns ``(probe, report)`` where ``report`` holds ``sqnr_db`` per
+    path, the drift report, and the per-layer summary."""
+    from repro.models import calibrate
+
+    if probe is None:
+        probe = FidelityProbe(obs=obs, max_rows=max_rows)
+    ref_caps, ref_out = calibrate.capture_linear_inputs(
+        ref_params, cfg, ctx, batch, quant=ref_quant,
+        min_n=min_n, max_rows=max_rows, forward_fn=forward_fn,
     )
+    caps, out = calibrate.capture_linear_inputs(
+        params, cfg, ctx, batch, quant=quant,
+        min_n=min_n, max_rows=max_rows, forward_fn=forward_fn,
+        fidelity=probe,
+    )
+    per = sqnr_trace(ref_caps, caps)
+    ref_y = ref_out[0] if isinstance(ref_out, tuple) else ref_out
+    y = out[0] if isinstance(out, tuple) else out
+    per["output"] = sqnr_db(np.asarray(ref_y, np.float64),
+                            np.asarray(y, np.float64))
+    probe.note_sqnr(per)
+    drift = probe.drift_report()
+    report = {"sqnr_db": per, "drift": drift, "layers": probe.summary()}
+    return probe, report

@@ -25,6 +25,10 @@ import threading
 LATENCY_BUCKETS_S = tuple(1e-6 * 2.0**i for i in range(27))
 # fractions (occupancy, utilization): linear 0..1
 RATIO_BUCKETS = tuple(round(0.05 * i, 2) for i in range(1, 21))
+# shared block exponents (E8M0, unbiased): unit ladder wide enough for
+# bf16-scale model activations/weights; the +Inf bucket catches hotter
+# blocks, everything colder piles into the first bucket
+EXP_BUCKETS = tuple(float(e) for e in range(-24, 17))
 
 
 class Counter:
@@ -95,6 +99,26 @@ class Histogram:
         self.count += 1
         self.min = min(self.min, v)
         self.max = max(self.max, v)
+
+    def merge_counts(self, counts, sum, count, vmin, vmax) -> None:
+        """Bulk-merge pre-bucketed counts computed elsewhere (the fidelity
+        probes histogram whole tensors on device with the same boundaries
+        and fold the result in with one call instead of one ``observe``
+        per element). ``counts`` must already include the +Inf bucket."""
+        if len(counts) != len(self.counts):
+            raise ValueError(
+                f"bucket count mismatch: got {len(counts)}, "
+                f"have {len(self.counts)}"
+            )
+        count = int(count)
+        if not count:
+            return
+        for i, c in enumerate(counts):
+            self.counts[i] += int(c)
+        self.sum += float(sum)
+        self.count += count
+        self.min = min(self.min, float(vmin))
+        self.max = max(self.max, float(vmax))
 
     @property
     def mean(self) -> float:
