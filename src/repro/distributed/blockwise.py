@@ -252,6 +252,55 @@ def analyze_cell(
     return terms
 
 
+def serve_layer_costs(cfg, n_tokens: int) -> list[float]:
+    """Closed-form per-layer forward FLOP estimates for serving-time stage
+    balancing (``sharding.stage_partition(mode="balanced")``).
+
+    Unlike :func:`analyze_cell` (the measured, XLA-compiled path) this is a
+    cheap analytic model — static-linear matmul FLOPs plus the quadratic
+    (window-clipped) SDPA term — because stage cuts only need *relative*
+    per-layer weights, not absolute rooflines. Non-attention block kinds
+    get projection-dominated estimates; they cannot ride the stage-parallel
+    executor anyway (see ``distributed.pipeline_exec``) but keep the cost
+    vector aligned with the layer index space."""
+    from repro.models import vit as vit_mod
+
+    is_vit = isinstance(cfg, vit_mod.ViTConfig)
+    segs = (vit_mod.build_segments if is_vit else lm.build_segments)(cfg)
+    N = int(n_tokens)
+    d = cfg.d_model
+    glu = cfg.ffn_kind in ("swiglu", "geglu")
+    costs: list[float] = []
+    for seg in segs:
+        for _ in range(seg.n):
+            if seg.kind in ("attn", "moe_attn", "zshared"):
+                a = seg.attn
+                proj = 2 * N * d * a.n_heads * a.head_dim * 2  # q + o
+                proj += 2 * N * d * a.n_kv * a.head_dim * 2  # k + v
+                eff = min(N, a.window) if a.window else N
+                sdpa = 4 * N * eff * a.n_heads * a.head_dim  # qk^T + pv
+                n_mats = 3 if glu else 2
+                ffn = 2 * N * n_mats * d * cfg.d_ff
+                if seg.kind == "moe_attn":
+                    ffn *= max(cfg.top_k, 1)
+                if seg.kind == "zshared":
+                    proj += 2 * N * (2 * d) * d + 2 * N * d * d  # w_in/w_out
+                costs.append(float(proj + sdpa + ffn))
+            elif seg.kind == "mamba":
+                m = seg.mamba
+                inner = m.n_heads * m.head_dim
+                proj = 2 * N * d * (2 * inner + 2 * m.n_heads * m.d_state)
+                proj += 2 * N * inner * d  # out projection
+                scan = 4 * N * m.n_heads * m.head_dim * m.d_state
+                costs.append(float(proj + scan))
+            elif seg.kind in ("mlstm", "slstm"):
+                # qkv/gate + out projections dominate the recurrent cell
+                costs.append(float(2 * N * d * 4 * d + 2 * N * 2 * d * d))
+            else:
+                raise ValueError(seg.kind)
+    return costs
+
+
 def _cell_step_cost(cfg, seg, b, mesh, ctx, n_dev):
     from repro.layers import xlstm as xl
 

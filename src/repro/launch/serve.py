@@ -50,15 +50,33 @@ from repro.models import calibrate, lm
 from repro.models.lm import build_segments
 
 
+def conversion_args(args) -> dict:
+    """Backend-conversion knobs, read from the CLI in exactly one place.
+
+    Both the LM and vision serve paths call :func:`build_backend`, which
+    consumes this dict — so a new conversion flag wired here applies to
+    every path at once instead of silently reaching only one of them (the
+    ``--cim-min-n`` class of bug)."""
+    return dict(
+        min_n=args.cim_min_n,  # MXFP4 packing and CIM conversion alike
+        adc_bits=args.adc_bits,
+        cm_bits=args.cm_bits,
+        calib_batches=args.calib_batches,
+    )
+
+
 def build_backend(args, cfg, params, batches=None, forward_fn=None,
-                  mxfp4_min_n: int = 256, obs=None):
+                  obs=None):
     """Returns (converted_params, RunCtx) for the requested backend.
 
     ``batches``/``forward_fn`` select the calibration capture for the cim
     backend (default: LM token batches through ``lm.forward``; the vision
     path passes synthetic images through ``vit.forward``). ``obs`` is the
     telemetry handle threaded into the RunCtx (kernel profiling scopes).
+    All conversion knobs come from :func:`conversion_args` — callers no
+    longer plumb them per path.
     """
+    conv_kw = conversion_args(args)
     shd = ShardingCtx()
     kw = dict(shd=shd, dense_attn_max=256, impl=args.impl, obs=obs)
     if getattr(args, "interpret", None) is not None:
@@ -68,23 +86,24 @@ def build_backend(args, cfg, params, batches=None, forward_fn=None,
         return params, RunCtx(**kw)
     if args.backend == "mxfp4":
         return (
-            convert_params_mxfp4(params, min_n=mxfp4_min_n),
+            convert_params_mxfp4(params, min_n=conv_kw["min_n"]),
             RunCtx(quant="mxfp4_wonly", **kw),
         )
     if args.backend == "cim":
         cim_cfg = cimlib.CIMConfig(
-            adc_bits=args.adc_bits, cm_bits=args.cm_bits, two_pass=True
+            adc_bits=conv_kw["adc_bits"], cm_bits=conv_kw["cm_bits"],
+            two_pass=True,
         )
         base_ctx = RunCtx(shd=shd, dense_attn_max=256)
         if batches is None:
             batches = calibrate.calibration_batches(
-                cfg, n_batches=args.calib_batches, batch=args.batch,
+                cfg, n_batches=conv_kw["calib_batches"], batch=args.batch,
                 seq=args.prompt_len,
             )
         t0 = time.time()
         conv, calibs = calibrate.convert_model_cim(
             params, cfg, base_ctx, batches,
-            cim_cfg=cim_cfg, min_n=args.cim_min_n, forward_fn=forward_fn,
+            cim_cfg=cim_cfg, min_n=conv_kw["min_n"], forward_fn=forward_fn,
         )
         log.info(
             "row-hist calibration: %s",
@@ -92,6 +111,24 @@ def build_backend(args, cfg, params, batches=None, forward_fn=None,
         )
         return conv, RunCtx(quant="cim", cim=cim_cfg, **kw)
     raise SystemExit(f"unknown --backend {args.backend!r}")
+
+
+def pipeline_shape(args) -> tuple[int, int] | None:
+    """(replicas, stages) from ``--mesh RxS`` / ``--stages``, or None when
+    pipelined execution is off."""
+    if args.mesh:
+        try:
+            r, s = args.mesh.lower().split("x")
+            shape = (int(r), int(s))
+        except ValueError:
+            raise SystemExit(f"--mesh wants REPLICASxSTAGES, got "
+                             f"{args.mesh!r}")
+        if shape[0] < 1 or shape[1] < 1:
+            raise SystemExit(f"--mesh axes must be >= 1, got {args.mesh!r}")
+        return shape
+    if args.stages:
+        return (1, args.stages)
+    return None
 
 
 def _mk_obs(args) -> obs_lib.Obs:
@@ -266,12 +303,29 @@ def serve_vision(args, cfg_full):
     )
     params, ctx = build_backend(
         args, cfg, fparams, batches=batches, forward_fn=vit.forward,
-        mxfp4_min_n=args.cim_min_n, obs=obs,
+        obs=obs,
     )
     if args.fidelity:
         _run_fidelity(args, cfg, fparams, params, ctx, obs, batches[0],
                       forward_fn=vit.forward)
-    eng = VisionEngine(params, cfg, ctx, obs=obs)
+    runner = None
+    pshape = pipeline_shape(args)
+    if pshape is not None:
+        from repro.distributed import pipeline_exec as pex
+
+        replicas, stages = pshape
+        runner = pex.build_vit_pipeline(
+            params, cfg, ctx, stages=stages, replicas=replicas,
+            microbatches=args.microbatches,
+            mb_size=max(1, -(-args.frames // (replicas *
+                                              args.microbatches))),
+        )
+        log.info("pipelined mesh: %s", obs_lib.kv(
+            replicas=replicas, stages=stages,
+            microbatches=args.microbatches, capacity=runner.capacity,
+            stage_cuts=runner.bounds, trunk_mb=runner.trunk_bytes / 2**20,
+        ))
+    eng = VisionEngine(params, cfg, ctx, obs=obs, runner=runner)
     frames = jax.random.normal(
         jax.random.PRNGKey(1),
         (args.frames, cfg.image_size, cfg.image_size, cfg.in_channels),
@@ -297,6 +351,65 @@ def serve_vision(args, cfg_full):
         fields.update(paper_fps=rep.paper_fps,
                       err_pct=100 * rep.fps_error)
     log.info("fws-pipeline: %s", obs_lib.kv(**fields))
+    if runner is not None:
+        mrep = eng.measured_report(frames, reps=2)
+        mrep.publish(obs.registry)
+        log.info("fws-pipeline-measured: %s", obs_lib.kv(
+            stages=mrep.n_stages, replicas=mrep.n_replicas,
+            step_wall_ms=mrep.step_wall_s * 1e3,
+            fps=mrep.throughput_items_per_s,
+            steady_fps=mrep.steady_items_per_s,
+            bubble=mrep.bubble_fraction,
+            fill_ms=mrep.fill_latency_s * 1e3,
+        ))
+    _finish_metrics(args, obs, log)
+
+
+def serve_pipelined_lm(args, cfg, params, ctx, obs: obs_lib.Obs,
+                       pshape: tuple[int, int]):
+    """``--stages``/``--mesh`` LM path: the prefill/scoring forward runs
+    stage-parallel on a real device mesh — per-stage resident weights,
+    overlapping microbatches — and reports measured pipeline health next
+    to the single-device baseline (decode stays on the existing engine)."""
+    log = obs_lib.get_logger("repro.serve", args.log_level)
+    replicas, stages = pshape
+    mb = max(1, -(-args.batch // (replicas * args.microbatches)))
+    ids = jax.random.randint(
+        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0,
+        cfg.vocab_size,
+    )
+    batch = {"ids": ids}
+    out, runner = lm.forward_pipelined(
+        params, cfg, ctx, batch, stages=stages, replicas=replicas,
+        microbatches=args.microbatches, mb_size=mb,
+    )
+    log.info("pipelined mesh: %s", obs_lib.kv(
+        replicas=replicas, stages=stages, microbatches=args.microbatches,
+        mb_size=mb, capacity=runner.capacity, stage_cuts=runner.bounds,
+        trunk_mb=runner.trunk_bytes / 2**20,
+    ))
+    rep = runner.measure(batch, reps=2)
+    rep.publish(obs.registry)
+    # single-device baseline on the same batch, same backend
+    base = jax.jit(lambda p, b: lm.forward(p, cfg, ctx, b)[0])
+    ref = jax.block_until_ready(base(params, batch))
+    t0 = time.perf_counter()
+    ref = jax.block_until_ready(base(params, batch))
+    base_wall = time.perf_counter() - t0
+    match = bool((out == ref).all())
+    log.info(
+        "%s [%s] pipelined forward: %s", cfg.name, args.backend,
+        obs_lib.kv(
+            rows=args.batch, tokens=args.batch * args.prompt_len,
+            step_wall_ms=rep.step_wall_s * 1e3,
+            base_wall_ms=base_wall * 1e3,
+            rows_s=rep.throughput_items_per_s,
+            steady_rows_s=rep.steady_items_per_s,
+            bubble=rep.bubble_fraction,
+            fill_ms=rep.fill_latency_s * 1e3,
+            parity="bitwise" if match else "diverged",
+        ),
+    )
     _finish_metrics(args, obs, log)
 
 
@@ -340,6 +453,20 @@ def main():
                     choices=("prefill", "decode"))
     ap.add_argument("--frames", type=int, default=4,
                     help="synthetic frame count for vision (--model vit-*)")
+    # ------------------------------------------- multi-device FWS pipeline
+    ap.add_argument("--stages", type=int, default=0,
+                    help="run the forward stage-parallel over this many "
+                         "pipeline stages (one device each, weights "
+                         "resident per stage); 0 = off")
+    ap.add_argument("--microbatches", type=int, default=2,
+                    help="overlapping microbatches per pipeline replica "
+                         "for --stages/--mesh")
+    ap.add_argument("--mesh", default=None,
+                    help="REPLICASxSTAGES device mesh for pipelined "
+                         "execution (e.g. 2x4: two data-parallel pipeline "
+                         "replicas of four stages); overrides --stages. "
+                         "On CPU force devices first: XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8")
     # ----------------------------------------------------- observability
     ap.add_argument("--metrics-out", default=None,
                     help="write a JSON metrics snapshot here (plus the "
@@ -379,13 +506,17 @@ def main():
         raise SystemExit(f"{cfg.name} is encoder-only; no decode")
     obs = _mk_obs(args)
     fparams, _ = lm.init_model(jax.random.PRNGKey(0), cfg)
-    params, ctx = build_backend(args, cfg, fparams,
-                                mxfp4_min_n=args.cim_min_n, obs=obs)
+    params, ctx = build_backend(args, cfg, fparams, obs=obs)
     if args.fidelity:
         fb = calibrate.calibration_batches(
             cfg, n_batches=1, batch=args.batch, seq=args.prompt_len
         )[0]
         _run_fidelity(args, cfg, fparams, params, ctx, obs, fb)
+
+    pshape = pipeline_shape(args)
+    if pshape is not None:
+        serve_pipelined_lm(args, cfg, params, ctx, obs, pshape)
+        return
 
     if args.serve_trace:
         serve_trace(args, cfg, params, ctx, obs)

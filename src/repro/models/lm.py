@@ -520,6 +520,26 @@ def lm_loss(params, cfg: ArchConfig, ctx: RunCtx, batch, chunk: int = 1024):
     return jnp.sum(tot) / jnp.maximum(jnp.sum(cnt), 1.0)
 
 
+def forward_pipelined(params, cfg: ArchConfig, ctx: RunCtx, batch: dict,
+                      *, runner=None, stages: int = 1, replicas: int = 1,
+                      microbatches: int = 2, mb_size: int = 1, **kw):
+    """Stage-parallel pipelined forward over a (replica, stage) device
+    mesh: the multi-device counterpart of :func:`forward` for the
+    prefill/scoring path (weights resident per stage, microbatches
+    overlapped — see ``distributed.pipeline_exec``).
+
+    Returns ``(logits, runner)``; pass the returned ``runner`` back in to
+    reuse the placed weights and compiled step across calls."""
+    if runner is None:
+        from repro.distributed import pipeline_exec as pex
+
+        runner = pex.build_lm_pipeline(
+            params, cfg, ctx, stages=stages, replicas=replicas,
+            microbatches=microbatches, mb_size=mb_size, **kw,
+        )
+    return runner.forward(batch), runner
+
+
 def decode_step(params, cfg: ArchConfig, ctx: RunCtx, ids, pos, caches):
     """One decode step. ids [B, 1]; pos scalar int32 (current position,
     shared by all lanes) or int32 [B] (per-lane positions — the serving

@@ -224,6 +224,27 @@ def forward(
     return head(ctx, cfg, params, x), None
 
 
+def forward_pipelined(params, cfg: ViTConfig, ctx: RunCtx, batch: dict,
+                      *, runner=None, stages: int | None = None,
+                      replicas: int = 1, microbatches: int = 2,
+                      mb_size: int = 1, **kw):
+    """Stage-parallel pipelined encoder forward on a real device mesh —
+    the executable form of the §5.3 multi-chip FWS deployment that
+    ``split_chips``/``forward_chip`` below only chain sequentially.
+
+    Returns ``(logits, runner)``; reuse the returned ``runner`` to keep
+    the per-stage resident weights and compiled step."""
+    if runner is None:
+        from repro.distributed import pipeline_exec as pex
+
+        runner = pex.build_vit_pipeline(
+            params, cfg, ctx, stages=stages or cfg.chips,
+            replicas=replicas, microbatches=microbatches, mb_size=mb_size,
+            **kw,
+        )
+    return runner.forward(batch), runner
+
+
 # ------------------------------------------------------- chip partition
 
 def split_chips(params, cfg: ViTConfig, n_chips: int | None = None):

@@ -109,13 +109,24 @@ class PipelineReport:
 
 
 def simulate(jobs: list, d_model: int, n_stages: int = N_STAGES,
-             warmup: int | None = None, chips: int = 1) -> PipelineReport:
+             warmup: int | None = None, chips: int = 1,
+             stage_time_fn=None, hop_time_fn=None) -> PipelineReport:
     """Run ``jobs`` (FIFO by list order) through the pipeline.
 
     With ``chips > 1`` the stage chain is ``chips`` copies of the
     ``n_stages`` compute stages separated by one inter-chip hop stage each
     (``perf.t_interchip``); utilization accounting covers the compute
     stages only (the hop is link occupancy, not array occupancy).
+
+    ``stage_time_fn(n_tokens, d_model, stage_index) -> seconds`` overrides
+    the CTT hardware model's per-stage service time — this is how the real
+    multi-device executor's *measured* per-stage walls drive the
+    discrete-event model for cross-validation (the CPU host cannot agree
+    with the hardware model in absolute time, but the schedule must; see
+    ``benchmarks/run.py::pipeline_multidevice``). ``hop_time_fn(n_tokens,
+    d_model) -> seconds`` likewise overrides ``perf.t_interchip``. The
+    analog/digital utilization split is a hardware-model quantity and
+    reports 0 under an override.
     """
     if not jobs:
         return PipelineReport([], 0.0, 0.0, 0.0, 0.0, 0.0, 0.0)
@@ -128,20 +139,36 @@ def simulate(jobs: list, d_model: int, n_stages: int = N_STAGES,
     busy = 0.0
     t_analog_busy = 0.0
     t_digital_busy = 0.0
+    n_compute = chips * n_stages
     for job in jobs:
-        t_stage = perf.stage_time(job.n_tokens, d_model)
-        t_hop = perf.t_interchip(job.n_tokens, d_model) if chips > 1 else 0.0
+        if stage_time_fn is None:
+            stage_times = [perf.stage_time(job.n_tokens, d_model)] * n_compute
+        else:
+            stage_times = [
+                float(stage_time_fn(job.n_tokens, d_model, k))
+                for k in range(n_compute)
+            ]
+        if chips > 1:
+            t_hop = (hop_time_fn or perf.t_interchip)(job.n_tokens, d_model)
+        else:
+            t_hop = 0.0
         t = max(job.arrival, free_at[0])
         start = t
+        ci = 0
         for k in range(total_stages):
-            t_k = t_hop if k in hop_at else t_stage
+            if k in hop_at:
+                t_k = t_hop
+            else:
+                t_k = stage_times[ci]
+                ci += 1
             t = max(t, free_at[k])
             free_at[k] = t + t_k
             t = t + t_k
         timings.append(JobTiming(job, start, t))
-        busy += t_stage  # per compute stage
-        t_analog_busy += perf.t_analog(job.n_tokens)
-        t_digital_busy += perf.t_digital(job.n_tokens, d_model)
+        busy += sum(stage_times) / n_compute  # mean per compute stage
+        if stage_time_fn is None:
+            t_analog_busy += perf.t_analog(job.n_tokens)
+            t_digital_busy += perf.t_digital(job.n_tokens, d_model)
     makespan = max(x.finish for x in timings)
     # steady state: drain spacing once the pipeline is full
     warmup = total_stages if warmup is None else warmup

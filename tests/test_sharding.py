@@ -79,3 +79,53 @@ def test_skipped_cells_match_design():
         assert (a, "long_500k") in sk
     assert len(C.all_cells()) == 34
     assert len(sk) == 6
+
+
+# ----------------------------------------------------- stage partitioning
+
+def test_stage_partition_default_equal_split_unchanged():
+    # vit-l32 / bert-large: 24 blocks, 2 chips -> the paper's 12+12 split
+    assert shd.stage_partition(24, 2) == [(0, 12), (12, 24)]
+    assert shd.stage_partition(7, 3) == [(0, 3), (3, 5), (5, 7)]
+
+
+def test_stage_partition_balanced_uniform_matches_equal():
+    # uniform costs: cost-balancing reduces to the equal split
+    assert shd.stage_partition(
+        24, 2, mode="balanced", costs=[1.0] * 24
+    ) == [(0, 12), (12, 24)]
+    # no costs given: balanced falls back to the equal split
+    assert shd.stage_partition(24, 2, mode="balanced") == [(0, 12), (12, 24)]
+
+
+def test_stage_partition_balanced_unequal_counts():
+    # one expensive layer pulls the cut: stage 0 takes fewer layers
+    costs = [10.0, 1.0, 1.0, 1.0]
+    bounds = shd.stage_partition(4, 2, mode="balanced", costs=costs)
+    assert bounds == [(0, 1), (1, 4)]
+    lens = [hi - lo for lo, hi in bounds]
+    assert len(set(lens)) > 1  # genuinely unequal layer counts
+    # bottleneck is optimal: no contiguous 2-split beats max(10, 3)
+    assert max(sum(costs[lo:hi]) for lo, hi in bounds) == 10.0
+
+
+def test_stage_partition_balanced_from_blockwise_costs():
+    from repro.distributed import blockwise
+
+    cfg = C.ARCHS["starcoder2-7b"]
+    costs = blockwise.serve_layer_costs(cfg, 512)
+    assert len(costs) == cfg.n_layers
+    assert all(c > 0 for c in costs)
+    # homogeneous dense trunk: balanced cuts == equal cuts
+    assert shd.stage_partition(
+        cfg.n_layers, 4, mode="balanced", costs=costs
+    ) == shd.stage_partition(cfg.n_layers, 4)
+
+
+def test_stage_partition_validation():
+    with pytest.raises(ValueError):
+        shd.stage_partition(4, 5)
+    with pytest.raises(ValueError):
+        shd.stage_partition(4, 2, mode="weird")
+    with pytest.raises(ValueError):
+        shd.stage_partition(4, 2, mode="balanced", costs=[1.0, 2.0])
