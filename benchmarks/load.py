@@ -1,0 +1,111 @@
+"""Canonical load-harness scenarios for BENCH_serving.json ("load" key).
+
+The engine-facing machinery (arrival processes, shared-system-prompt
+workload synthesis, the wall-clock replay driver, the report schema)
+lives in ``repro.serving.load``; this module pins the benchmark
+scenarios the CI artifact tracks:
+
+  * ``poisson`` — exponential inter-arrival gaps at a fixed requests/s
+    rate (the open-loop production model);
+  * ``scripted`` — a deterministic burst trace (groups of simultaneous
+    arrivals), the adversarial admission case and the friendly
+    prefix-cache case, reused for the cache on/off comparison because
+    its arrival times are reproducible.
+
+Both draw from one mixed prompt/output-length workload in which most
+prompts open with a shared system prompt. Standalone usage::
+
+    PYTHONPATH=src python benchmarks/load.py [--requests N] [--rate RPS]
+
+prints the per-scenario load reports as JSON; ``benchmarks/run.py
+--only serving_load`` folds the same reports into BENCH_serving.json.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.obs import Obs, SLOTargets
+from repro.serving import Engine, EngineConfig
+from repro.serving import load as load_mod
+
+# one workload + engine shape shared by every scenario so the reports
+# are comparable across arrival processes and cache settings
+ENGINE = dict(lanes=4, num_slots=8, page_len=32, prefill_len=8,
+              policy="chunked", chunk_len=4)
+WORKLOAD = dict(prompt_len=(2, 12), out_len=(2, 8), n_system=2,
+                system_len=8, p_shared=0.8, max_prompt=31)
+# generous CI-box targets: order-of-magnitude serving regressions, not
+# scheduler jitter on shared runners
+TARGETS = SLOTargets(ttft_p99_s=2.0, token_p99_s=1.0)
+
+
+def workload(vocab_size: int, n: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    spec = load_mod.WorkloadSpec(vocab_size=vocab_size, **WORKLOAD)
+    return load_mod.synth_requests(spec, n, rng), rng
+
+
+def scenario_traces(vocab_size: int, n: int, rate_rps: float,
+                    seed: int = 0) -> dict:
+    """The two tracked arrival processes over one drawn workload."""
+    reqs, rng = workload(vocab_size, n, seed)
+    return {
+        "poisson": load_mod.make_trace(
+            load_mod.poisson_arrivals(rate_rps, n, rng), reqs),
+        "scripted": load_mod.make_trace(
+            load_mod.burst_arrivals(n, burst=4, gap_s=0.02), reqs),
+    }
+
+
+def run_scenario(make_engine, trace, targets: SLOTargets = TARGETS) -> dict:
+    """Warm the engine's compiled steps, replay the trace on the wall
+    clock, and return (report, outputs)."""
+    eng = make_engine()
+    eng.add_request(list(trace[0].prompt), max_new=2)  # jit warmup
+    eng.run()
+    eng.obs.reset()
+    res = load_mod.replay(eng, trace)
+    rep = load_mod.load_report(eng, targets=targets, wall_s=res["wall_s"])
+    return rep, res["out"]
+
+
+def engine_factory(params, cfg, ctx, prefix_cache: bool = True,
+                   enabled_obs: bool = True):
+    def make():
+        return Engine(params, cfg, ctx,
+                      EngineConfig(prefix_cache=prefix_cache, **ENGINE),
+                      obs=Obs(enabled=enabled_obs))
+    return make
+
+
+def main(argv=None) -> None:
+    import argparse
+    import json
+
+    import jax
+
+    from repro import configs as C
+    from repro.layers.common import RunCtx, ShardingCtx, convert_params_mxfp4
+    from repro.models import lm
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=200.0,
+                    help="poisson arrival rate, requests/s")
+    args = ap.parse_args(argv)
+
+    cfg = C.tiny(C.ARCHS["starcoder2-7b"])
+    params, _ = lm.init_model(jax.random.PRNGKey(0), cfg)
+    params = convert_params_mxfp4(params)
+    ctx = RunCtx(shd=ShardingCtx(), quant="mxfp4_wonly", dense_attn_max=256)
+    mk = engine_factory(params, cfg, ctx)
+    out = {}
+    for name, trace in scenario_traces(cfg.vocab_size, args.requests,
+                                       args.rate).items():
+        out[name], _ = run_scenario(mk, trace)
+    print(json.dumps(out, indent=2, default=str))
+
+
+if __name__ == "__main__":
+    main()

@@ -203,7 +203,8 @@ def serve_trace(args, cfg, params, ctx, obs: obs_lib.Obs):
     ecfg = EngineConfig(
         lanes=args.lanes, num_slots=args.slots, page_len=page_len,
         prefill_len=prefill_len, policy=args.policy,
-        kv_layout=args.kv_layout,
+        kv_layout=args.kv_layout, chunk_len=args.chunk_len or None,
+        prefix_cache=args.prefix_cache,
     )
     eng = Engine(params, cfg, ctx, ecfg, obs=obs)
     t0 = time.time()
@@ -257,6 +258,8 @@ def serve_trace(args, cfg, params, ctx, obs: obs_lib.Obs):
         policy=ecfg.policy, lanes=ecfg.lanes, slots=ecfg.num_slots,
         page=ecfg.page_len, slot_util=eng.slot_utilization,
     ))
+    if eng.prefix is not None:
+        log.info("prefix-cache: %s", obs_lib.kv(**eng.prefix_stats()))
     log.info("fws-pipeline d=%d: %s", cfg.d_model, obs_lib.kv(
         sim_tok_s=rep.tokens_per_s,
         steady_state_fps=rep.pipeline.steady_state_fps,
@@ -279,6 +282,82 @@ def serve_trace(args, cfg, params, ctx, obs: obs_lib.Obs):
     ))
     for rid in sorted(out)[:4]:
         log.debug("rid %d: %s", rid, out[rid])
+    _finish_metrics(args, obs, log)
+
+
+def serve_load(args, cfg, params, ctx, obs: obs_lib.Obs):
+    """``--arrivals``: trace-driven load harness. Replays a Poisson /
+    scripted-burst / recorded-trace arrival process with mixed prompt
+    and output lengths (and shared system prompts, what the prefix cache
+    deduplicates) through the real engine on the host wall clock, then
+    scores SLOs and publishes the load report."""
+    import numpy as np
+
+    from repro.serving import Engine, EngineConfig
+    from repro.serving import load as load_mod
+
+    log = obs_lib.get_logger("repro.serve", args.log_level)
+    windows = [s.attn.window for s in build_segments(cfg)
+               if s.attn is not None and s.attn.window > 0]
+    page_len = args.prompt_len + args.tokens
+    if windows:
+        page_len = min(page_len, min(windows))
+    prefill_len = max(2, page_len - args.tokens)
+    chunk = args.chunk_len or None
+    ecfg = EngineConfig(
+        lanes=args.lanes, num_slots=args.slots, page_len=page_len,
+        prefill_len=prefill_len, policy=args.policy,
+        kv_layout=args.kv_layout, chunk_len=chunk,
+        prefix_cache=args.prefix_cache,
+    )
+    eng = Engine(params, cfg, ctx, ecfg, obs=obs)
+
+    kind, val = load_mod.parse_arrivals(args.arrivals)
+    rng = np.random.default_rng(0)
+    if kind == "trace":
+        trace = load_mod.load_trace(val)
+    else:
+        max_prompt = (page_len if chunk else prefill_len) - 1
+        sys_len = max(2, min(2 * chunk if chunk else 4, max_prompt - 2))
+        spec = load_mod.WorkloadSpec(
+            vocab_size=cfg.vocab_size,
+            prompt_len=(2, max(2, max_prompt - sys_len)),
+            out_len=(2, max(2, args.tokens)),
+            system_len=sys_len, max_prompt=max_prompt,
+        )
+        reqs = load_mod.synth_requests(spec, args.requests, rng)
+        times = (load_mod.poisson_arrivals(val, len(reqs), rng)
+                 if kind == "poisson"
+                 else load_mod.burst_arrivals(len(reqs), *val))
+        trace = load_mod.make_trace(times, reqs)
+
+    # warm the compiled steps on a throwaway request so the replay's
+    # arrival clock measures serving, not XLA compilation
+    eng.add_request(list(trace[0].prompt), max_new=2)
+    eng.run()
+    obs.reset()
+
+    log.info("load: replaying %s", obs_lib.kv(
+        arrivals=args.arrivals, requests=len(trace),
+        chunk_len=chunk or 0, prefix_cache=args.prefix_cache,
+        policy=ecfg.policy,
+    ))
+    res = load_mod.replay(eng, trace)
+    rep = load_mod.load_report(eng, wall_s=res["wall_s"])
+    eng.trace_report().publish(obs.registry)
+    ttft = rep["ttft_s"] or {}
+    tokl = rep["token_latency_s"] or {}
+    log.info("load done: %s", obs_lib.kv(
+        requests=rep["n_requests"], tokens=rep["tokens_generated"],
+        wall_s=rep["wall_s"], tok_s=rep["tokens_per_s_wall"],
+        ttft_p50_ms=ttft.get("p50", 0) * 1e3,
+        ttft_p99_ms=ttft.get("p99", 0) * 1e3,
+        token_p50_ms=tokl.get("p50", 0) * 1e3,
+        token_p99_ms=tokl.get("p99", 0) * 1e3,
+        page_evictions=rep["page_evictions"],
+    ))
+    if rep["prefix"]:
+        log.info("prefix-cache: %s", obs_lib.kv(**rep["prefix"]))
     _finish_metrics(args, obs, log)
 
 
@@ -450,7 +529,25 @@ def main():
                          "fused head-interleaved paged layout decoded by "
                          "the ragged paged flash-decode path")
     ap.add_argument("--policy", default="prefill",
-                    choices=("prefill", "decode"))
+                    choices=("prefill", "decode", "chunked"),
+                    help="admission policy; 'chunked' interleaves prefill "
+                         "chunks with decode steps (needs --chunk-len)")
+    ap.add_argument("--chunk-len", type=int, default=0,
+                    help="chunked prefill: run prompts through a fixed "
+                         "[1, chunk_len] step in absolute-position "
+                         "windows, lifting the prompt cap from "
+                         "prefill_len to page_len (0 = single-shot "
+                         "padded prefill)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix prefix cache over the KV page pool: "
+                         "shared prompt prefixes reuse refcounted, "
+                         "content-addressed pages (requires --chunk-len)")
+    ap.add_argument("--arrivals", default=None,
+                    help="trace-driven load harness: replay this arrival "
+                         "process through the engine on the host wall "
+                         "clock (poisson:RATE | trace:FILE | "
+                         "burst:N:GAP_S) instead of the --serve-trace "
+                         "staggered demo")
     ap.add_argument("--frames", type=int, default=4,
                     help="synthetic frame count for vision (--model vit-*)")
     # ------------------------------------------- multi-device FWS pipeline
@@ -516,6 +613,10 @@ def main():
     pshape = pipeline_shape(args)
     if pshape is not None:
         serve_pipelined_lm(args, cfg, params, ctx, obs, pshape)
+        return
+
+    if args.arrivals:
+        serve_load(args, cfg, params, ctx, obs)
         return
 
     if args.serve_trace:

@@ -382,6 +382,9 @@ def attn_apply(
     Train/prefill: ``cache=None``, positions [B, S].
     Decode: ``cache={'k','v'}`` ring/linear buffers, ``pos`` scalar int32
     (current length; the new token is written at slot pos % W).
+    Chunked prefill: ``cache`` + S > 1 + ``pos`` (chunk start offset) —
+    ``positions`` carry absolute prompt offsets and fresh rows land at
+    their absolute page slots (serving engine ``chunk_len`` path).
     ``rope_tables`` shares precomputed RoPE cos/sin across layers.
     Returns (y, new_cache).
     """
@@ -403,7 +406,48 @@ def attn_apply(
     q = ctx.act(q.reshape(b, s, kv, g, hd), "batch", "seq", "kv_heads", "heads_g", "head_dim")
 
     fused = cache is not None and "kv" in cache
-    if cache is not None and s > 1:
+    if cache is not None and s > 1 and pos is not None:
+        # chunked prefill into an existing page: the engine feeds one
+        # fixed-shape [B, chunk] window of a longer prompt per step, with
+        # ``positions`` carrying absolute prompt offsets (KV_PAD on pad
+        # columns) and ``pos`` the chunk's start offset. Fresh K/V rows
+        # are written at their absolute slots — pad columns map out of
+        # bounds and are dropped — and this chunk's queries attend over
+        # the *whole* page: rows beyond the written prefix are zero
+        # (pages are reset/cloned at admission, see kvcache.clone_prefix)
+        # and carry k_pos > q_pos, so the causal mask excludes them.
+        w = (cache["kv"] if fused else cache["k"]).shape[1]
+        rows = jnp.arange(b)[:, None]
+        slot = jnp.where(positions > _KV_PAD_MIN, positions, w)
+        if fused:
+            dt = cache["kv"].dtype
+            kvnew = paged_layout.fuse_kv(k.astype(dt), v.astype(dt))
+            ckv = cache["kv"].at[rows, slot].set(kvnew, mode="drop")
+            new_cache = {"kv": ckv}
+            kpage, vpage = paged_layout.split_kv(ckv)
+            if "kv_codes" in cache:
+                new_cache.update(paged_layout.quant_page_full(kpage, vpage))
+        else:
+            ck = cache["k"].at[rows, slot].set(
+                k.astype(cache["k"].dtype), mode="drop")
+            cv = cache["v"].at[rows, slot].set(
+                v.astype(cache["v"].dtype), mode="drop")
+            new_cache = {"k": ck, "v": cv}
+            kpage, vpage = ck, cv
+            if "k_codes" in cache:
+                # the quantized-resident mirrors are recomputed for the
+                # FULL page every chunk (O(page) per chunk, documented):
+                # blockwise V exponents near the chunk boundary depend on
+                # rows outside the chunk, and mirrors == full requant of
+                # the raw page is the invariant that makes pages
+                # content-addressable (serving/prefix.py). Nothing reads
+                # the pre-chunk mirror state here, so a cloned page only
+                # needs its raw rows copied.
+                new_cache.update(_quant_cache_full(ck, cv))
+        k_pos = jnp.broadcast_to(jnp.arange(w)[None], (b, w))
+        o = _dense_attn(q, kpage, vpage, positions, k_pos, cfg,
+                        mx_digital=mx_dig)
+    elif cache is not None and s > 1:
         # prefill-into-cache: attention over the fresh K/V, cache filled
         # with the last W positions (ring convention: slot = pos % W)
         w = (cache["kv"] if fused else cache["k"]).shape[1]

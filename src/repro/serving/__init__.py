@@ -1,17 +1,26 @@
 """Continuous-batching serving engine over the backend registry.
 
 Modules:
-  kvcache   — slot-paged KV pool (fixed page pool + pure-Python allocator)
+  kvcache   — slot-paged KV pool (fixed page pool + refcounted allocator)
   scheduler — request queue, admission policies, stop conditions
+  prefix    — radix-style prefix cache: shared prompt prefixes mapped to
+              refcounted, content-addressed page slots
   pipeline  — discrete-event model of the §5.3 twelve-stage FWS pipeline
               (single- and multi-chip with inter-chip hop stages)
   engine    — user-facing Engine.add_request/step/run API (decoder LMs)
+  load      — trace-driven load harness: Poisson / scripted arrivals
+              replayed through the real Engine against SLOs
   vision    — single-stream image-throughput engine for encoder (ViT)
               workloads: measured stage traffic -> Table 7 FPS
 """
 
 from repro.serving.engine import Engine, EngineConfig  # noqa: F401
-from repro.serving.kvcache import PagedKVCache, SlotAllocator  # noqa: F401
+from repro.serving.kvcache import (  # noqa: F401
+    PagedKVCache,
+    PoolExhausted,
+    SlotAllocator,
+)
+from repro.serving.prefix import PrefixCache, PrefixHit  # noqa: F401
 from repro.serving.scheduler import Request, Scheduler  # noqa: F401
 from repro.serving.vision import (  # noqa: F401
     VisionEngine,

@@ -30,15 +30,27 @@ import jax.numpy as jnp
 from repro.models import lm
 
 
+class PoolExhausted(RuntimeError):
+    """Raised when a page slot is requested from an empty pool."""
+
+
 @dataclasses.dataclass
 class SlotAllocator:
-    """LIFO free-list over ``num_slots`` page slots. Host-side only."""
+    """Refcounted LIFO free-list over ``num_slots`` page slots.
+
+    Host-side only. A slot is handed out with refcount 1; the prefix
+    cache (`serving.prefix`) takes additional references on pages it
+    shares between requests via :meth:`retain`. A slot returns to the
+    free list only when its refcount drops to zero, so a cached page can
+    outlive the request that prefilled it and a live request's page can
+    never be recycled by a cache eviction.
+    """
 
     num_slots: int
 
     def __post_init__(self):
         self._free = list(range(self.num_slots - 1, -1, -1))
-        self._used: set[int] = set()
+        self._refs: dict[int, int] = {}
 
     @property
     def num_free(self) -> int:
@@ -46,20 +58,45 @@ class SlotAllocator:
 
     @property
     def in_use(self) -> set[int]:
-        return set(self._used)
+        return set(self._refs)
 
-    def alloc(self) -> int | None:
+    def alloc(self) -> int:
+        """Pop a free slot (refcount 1). Raises :class:`PoolExhausted`
+        when the pool is empty — the old ``None`` return flowed straight
+        into the jitted step as a row index (engine bug)."""
         if not self._free:
-            return None
+            raise PoolExhausted(
+                f"no free KV page slots (num_slots={self.num_slots}, "
+                f"all referenced)"
+            )
         slot = self._free.pop()
-        self._used.add(slot)
+        self._refs[slot] = 1
         return slot
 
-    def free(self, slot: int) -> None:
-        if slot not in self._used:
+    def try_alloc(self) -> int | None:
+        """Like :meth:`alloc` but returns ``None`` on an empty pool."""
+        return self.alloc() if self._free else None
+
+    def retain(self, slot: int) -> None:
+        if slot not in self._refs:
             raise ValueError(f"slot {slot} is not allocated")
-        self._used.remove(slot)
-        self._free.append(slot)
+        self._refs[slot] += 1
+
+    def release(self, slot: int) -> None:
+        """Drop one reference; the slot is freed at refcount zero."""
+        if slot not in self._refs:
+            raise ValueError(f"slot {slot} is not allocated")
+        self._refs[slot] -= 1
+        if self._refs[slot] == 0:
+            del self._refs[slot]
+            self._free.append(slot)
+
+    # the engine owns exactly one reference per in-flight request, so its
+    # retire path reads naturally as free()
+    free = release
+
+    def refcount(self, slot: int) -> int:
+        return self._refs.get(slot, 0)
 
 
 def _batch_axis(spec: tuple) -> int:
@@ -101,6 +138,46 @@ def scatter_rows(pool, specs, rows, values):
             ax = _batch_axis(seg_spec[k])
             idx = (slice(None),) * ax + (rows,)
             seg[k] = v.at[idx].set(val.astype(v.dtype))
+        out.append(seg)
+    return out
+
+
+def clone_prefix(pool, specs, src_row, dst_row, n):
+    """Copy the first ``n`` cache-sequence rows of page ``src_row`` into
+    page ``dst_row`` and zero everything beyond them.
+
+    Called (jitted) at chunked admission time. With ``n == 0`` this is a
+    pure page reset — required because reused slots carry stale rows, and
+    a stale raw row inside the active V 32-block would corrupt that
+    block's shared exponent on the next quantized-resident update. With
+    ``n > 0`` it is the prefix-cache copy-on-write: the shared prefix is
+    materialized into the new request's own page *before* its first
+    suffix chunk diverges from the donor.
+
+    Only raw K/V rows need to survive the copy bit-exactly: quantized
+    mirror leaves (and any leaf without a ``cache_seq`` axis, e.g. legacy
+    ``v_exps``) are zeroed outright, because the first suffix chunk step
+    recomputes mirrors from the raw page in full (see the chunked-prefill
+    branch in ``layers.attention.attn_apply``) before anything reads
+    them. Blockwise V codes straddling the prefix boundary depend on
+    donor rows beyond ``n``, so copying them would be wrong anyway.
+    """
+    out = []
+    for seg_pool, seg_spec in zip(pool, specs):
+        seg = {}
+        for name, v in seg_pool.items():
+            spec = seg_spec[name]
+            ax = _batch_axis(spec)
+            row = jnp.take(v, src_row[None], axis=ax)
+            if "cache_seq" in spec and name in ("k", "v", "kv"):
+                sax = spec.index("cache_seq")
+                shape = [1] * v.ndim
+                shape[sax] = v.shape[sax]
+                idx = jnp.arange(v.shape[sax]).reshape(shape)
+                row = jnp.where(idx < n, row, jnp.zeros((), v.dtype))
+            else:
+                row = jnp.zeros_like(row)
+            seg[name] = v.at[(slice(None),) * ax + (dst_row[None],)].set(row)
         out.append(seg)
     return out
 

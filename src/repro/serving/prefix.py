@@ -1,0 +1,302 @@
+"""Radix-style prefix cache over the paged KV pool.
+
+Shared system prompts dominate production traffic: the first D·L tokens
+of most requests are identical, and the FWS premise (fixed weights, all
+cost in the dynamic KV path) makes recomputing them the single biggest
+avoidable cost. This module deduplicates that work at page granularity:
+
+* The tree is a **token-chunk radix tree** — one edge per ``chunk_len``
+  prompt tokens, matching the engine's fixed-shape chunked-prefill grid,
+  so a cached prefix is always re-usable without recompiles. Each node
+  at depth ``d`` names the page of some past request whose first ``d*L``
+  tokens equal the node's path and offers its first ``d*L`` KV rows.
+
+* Slots are shared via **refcounts** on ``SlotAllocator``: the cache
+  holds one reference per slot it advertises, the engine holds one per
+  in-flight request. A donor page can therefore outlive its request, and
+  an LRU eviction can never pull a page out from under a live lane
+  (evictable ⇔ refcount == 1 ⇔ the cache is the sole owner).
+
+* A hit is **copy-on-write at the divergence point**: the engine copies
+  the matched rows into the admitted request's own page
+  (``kvcache.clone_prefix``) before its first suffix chunk runs. The
+  divergence point is the match depth — decode writes begin immediately
+  after prefill — so the copy happens eagerly at admission.
+
+* Page identity is **content-addressable**: a node carries a fingerprint
+  of the donor page's prefix rows — hashing the PR 4 quantized-resident
+  code mirrors when the pool has them, raw K/V rows otherwise — and the
+  engine re-hashes the donor at match time. A hit is therefore provably
+  the same KV bytes, not just the same token ids: any corruption or
+  layout drift turns into a counted miss instead of silent wrong KV.
+
+Correctness of reuse rests on causality: row ``i`` of a page depends
+only on prompt tokens ``<= i``, pages are zeroed beyond the copied
+prefix at admission, and the first suffix chunk recomputes the quantized
+mirrors for the whole page — so a cache-on run's pool state is bitwise a
+cache-off run's, and outputs are token-identical (pinned by
+tests/test_prefix.py across float/mxfp4/cim).
+
+Blockwise V codes need care when hashing: a 32-block straddling the
+prefix boundary shares its exponent with donor rows *beyond* the prefix,
+so those bytes are donor-dependent. Fingerprints cover only whole
+V blocks inside the prefix (K codes and raw rows are per-position and
+cover the tail).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import struct
+
+import numpy as np
+
+from repro.core import mx as mxlib
+
+
+def page_rows(kv, slot: int) -> dict:
+    """Pull page ``slot`` to the host in one device_get — fingerprinting
+    happens on the host copy so hashing k depths costs one transfer, not
+    k × leaves of them (the transfer, not the SHA, dominates)."""
+    import jax
+    import jax.numpy as jnp
+
+    takes, keys = [], []
+    for si, (seg_cache, seg_spec) in enumerate(zip(kv.pool, kv.specs)):
+        for name in sorted(seg_cache):
+            v = seg_cache[name]
+            takes.append(jnp.take(v, slot, axis=seg_spec[name].index("batch")))
+            keys.append((si, name))
+    return dict(zip(keys, jax.device_get(takes)))
+
+
+def rows_fingerprint(kv, rows: dict, n: int) -> bytes:
+    """SHA-1 over the prefix-determined bytes of the first ``n`` rows of
+    a host page copy (:func:`page_rows`): every leaf's prefix slice, with
+    blockwise V codes/exponents truncated to whole 32-blocks (partial
+    boundary blocks depend on donor rows beyond the prefix — see module
+    docstring)."""
+    h = hashlib.sha1()
+    h.update(struct.pack("<iii", n, kv.page_len, int(kv.fused)))
+    nb = (n // mxlib.BLOCK) * mxlib.BLOCK
+    for si, seg_spec in enumerate(kv.specs):
+        for name in sorted(seg_spec):
+            arr = rows[(si, name)]
+            spec = seg_spec[name]
+            ax = spec.index("batch")
+            sub = spec[:ax] + spec[ax + 1:]
+            if name == "v_exps":
+                # shared exponents, one per 32-block along the key axis:
+                # legacy [Hkv, Dh, Wpad//32] (block axis last), fused
+                # [ceil(W/32), Hkv, Dh] (block axis first)
+                bax = 0 if kv.fused else arr.ndim - 1
+                parts = [np.take(arr, np.arange(n // mxlib.BLOCK), axis=bax)]
+            elif name == "v_codes":
+                sax = sub.index("cache_seq")
+                parts = [np.take(arr, np.arange(nb), axis=sax)]
+            elif name == "kv_codes":
+                # fused head-interleaved codes [W, 2*Hkv, dpad//2]: even
+                # head rows are K codes (per-position, safe to n), odd
+                # are V codes (blockwise, whole blocks only)
+                parts = [arr[:n, 0::2], arr[:nb, 1::2]]
+            elif "cache_seq" in sub:  # k, v, kv, k_codes, k_exps
+                sax = sub.index("cache_seq")
+                parts = [np.take(arr, np.arange(n), axis=sax)]
+            else:
+                continue
+            h.update(name.encode())
+            for p in parts:
+                p = np.ascontiguousarray(p)
+                h.update(struct.pack("<i", p.ndim))
+                h.update(np.asarray(p.shape, np.int64).tobytes())
+                h.update(p.tobytes())
+    return h.digest()
+
+
+def page_fingerprint(kv, slot: int, n: int) -> bytes:
+    """One-shot fingerprint of rows ``[0, n)`` of page ``slot``."""
+    return rows_fingerprint(kv, page_rows(kv, slot), n)
+
+
+class _Node:
+    __slots__ = ("children", "slot", "fp", "depth", "last_used")
+
+    def __init__(self, depth: int):
+        self.children: dict[tuple, _Node] = {}
+        self.slot: int | None = None  # backing page, None = tombstone
+        self.fp: bytes | None = None
+        self.depth = depth
+        self.last_used = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefixHit:
+    n_tokens: int  # chunk-aligned matched prefix length
+    slot: int  # donor page to clone from
+
+
+class PrefixCache:
+    """Token-chunk radix tree mapping shared prompt prefixes to
+    refcounted page slots. Host-side control plane; the engine does the
+    page copies.
+
+    ``fingerprints=False`` disables content hashing (used by the
+    control-plane property tests, which run without a real KV pool).
+    """
+
+    def __init__(self, chunk_len: int, allocator, obs=None,
+                 fingerprints: bool = True):
+        if chunk_len < 1:
+            raise ValueError("chunk_len must be >= 1")
+        self.chunk_len = chunk_len
+        self.allocator = allocator
+        self.obs = obs
+        self.fingerprints = fingerprints
+        self.root = _Node(0)
+        self._tick = 0
+        # slot -> nodes advertising it; the cache holds ONE allocator
+        # reference per distinct slot in this map
+        self._slots: dict[int, set[_Node]] = {}
+        self.hits = 0
+        self.misses = 0
+        self.hit_tokens = 0
+        self.evictions = 0
+        self.verify_failures = 0
+        self.inserted = 0
+
+    # ------------------------------------------------------------ helpers
+
+    def _count(self, name: str, by: int = 1) -> None:
+        if self.obs is not None and self.obs.enabled:
+            self.obs.registry.counter(
+                f"serve_prefix_{name}_total",
+                f"prefix cache {name.replace('_', ' ')}",
+            ).inc(by)
+
+    def _chunks(self, prompt, depth: int):
+        L = self.chunk_len
+        return tuple(prompt[(depth - 1) * L:depth * L])
+
+    def _drop_slot(self, slot: int) -> None:
+        """Forget every node backed by ``slot`` and release the cache's
+        reference (tombstoning keeps deeper nodes reachable)."""
+        for node in self._slots.pop(slot, ()):
+            node.slot = None
+            node.fp = None
+        self.allocator.release(slot)
+
+    # ------------------------------------------------------------- queries
+
+    @property
+    def cached_slots(self) -> set[int]:
+        return set(self._slots)
+
+    @property
+    def n_evictable(self) -> int:
+        """Cached pages no live request also holds (refcount 1 ⇒ the
+        cache is the sole owner and may free them on demand)."""
+        return sum(1 for s in self._slots if self.allocator.refcount(s) == 1)
+
+    def stats(self) -> dict:
+        lookups = self.hits + self.misses
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "hit_rate": self.hits / lookups if lookups else 0.0,
+            "hit_tokens": self.hit_tokens,
+            "evictions": self.evictions,
+            "verify_failures": self.verify_failures,
+            "inserted": self.inserted,
+            "cached_slots": len(self._slots),
+        }
+
+    # ------------------------------------------------------------ mutation
+
+    def match(self, prompt, kv=None) -> PrefixHit | None:
+        """Longest chunk-aligned cached prefix of ``prompt``, capped at
+        ``len(prompt) - 1`` tokens: at least one suffix token always runs
+        live, so the admitted request still emits its first token from a
+        real prefill chunk (which also rebuilds the page's quantized
+        mirrors). Verifies the donor page's fingerprint before declaring
+        a hit."""
+        self._tick += 1
+        max_depth = (len(prompt) - 1) // self.chunk_len
+        node, best = self.root, None
+        for d in range(1, max_depth + 1):
+            node = node.children.get(self._chunks(prompt, d))
+            if node is None:
+                break
+            if node.slot is not None:
+                best = node
+        if best is None:
+            self.misses += 1
+            self._count("misses")
+            return None
+        if self.fingerprints and kv is not None:
+            fp = page_fingerprint(kv, best.slot, best.depth * self.chunk_len)
+            if fp != best.fp:
+                # the bytes under the advertised page changed — integrity
+                # failure, not a routine miss; drop the backing slot
+                self.verify_failures += 1
+                self.misses += 1
+                self._count("verify_failures")
+                self._count("misses")
+                self._drop_slot(best.slot)
+                return None
+        best.last_used = self._tick
+        n = best.depth * self.chunk_len
+        self.hits += 1
+        self.hit_tokens += n
+        self._count("hits")
+        self._count("hit_tokens", n)
+        return PrefixHit(n_tokens=n, slot=best.slot)
+
+    def insert(self, prompt, slot: int, kv=None) -> bool:
+        """Offer a freshly prefilled page to the cache. Nodes are created
+        for every full chunk of ``prompt``; nodes that already advertise
+        a (verified-identical, by the causality argument) page keep their
+        existing backing. Returns True if the cache adopted ``slot`` (and
+        took an allocator reference on it)."""
+        self._tick += 1
+        max_depth = len(prompt) // self.chunk_len
+        node, adopted = self.root, False
+        rows = (page_rows(kv, slot)
+                if self.fingerprints and kv is not None and max_depth else None)
+        for d in range(1, max_depth + 1):
+            key = self._chunks(prompt, d)
+            child = node.children.get(key)
+            if child is None:
+                child = node.children[key] = _Node(d)
+            if child.slot is None:
+                child.slot = slot
+                child.fp = (rows_fingerprint(kv, rows, d * self.chunk_len)
+                            if rows is not None else None)
+                if not adopted:
+                    self.allocator.retain(slot)
+                    adopted = True
+                self._slots.setdefault(slot, set()).add(child)
+            child.last_used = self._tick
+            node = child
+        if adopted:
+            self.inserted += 1
+            self._count("inserts")
+        return adopted
+
+    def evict_lru(self) -> bool:
+        """Free the least-recently-used evictable page (refcount 1). The
+        freed slot lands back on the allocator's free list; tombstoned
+        nodes keep deeper, differently-backed paths reachable. Returns
+        False when nothing is evictable."""
+        victims = [
+            (max(n.last_used for n in nodes), slot)
+            for slot, nodes in self._slots.items()
+            if self.allocator.refcount(slot) == 1
+        ]
+        if not victims:
+            return False
+        _, slot = min(victims)
+        self._drop_slot(slot)
+        self.evictions += 1
+        self._count("evictions")
+        return True

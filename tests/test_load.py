@@ -1,0 +1,119 @@
+"""Load-harness pieces: arrival processes, workload synthesis, trace
+round-trips, and the wall-clock replay driver against the real engine.
+
+The replay crux check piggybacks on lane isolation: whatever order the
+wall clock admits requests in, per-request outputs must equal a plain
+all-at-once engine run — so the harness adds queueing pressure without
+perturbing results.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs as C
+from repro.layers.common import RunCtx, ShardingCtx
+from repro.models import lm
+from repro.obs import Obs, SLOTargets
+from repro.serving import Engine, EngineConfig
+from repro.serving import load as load_mod
+
+CFG = C.tiny(C.ARCHS["starcoder2-7b"])
+
+
+@pytest.fixture(scope="module")
+def float_model():
+    params, _ = lm.init_model(jax.random.PRNGKey(0), CFG)
+    return params, RunCtx(shd=ShardingCtx(), dense_attn_max=256)
+
+
+# ------------------------------------------------------------- arrivals
+
+def test_poisson_arrivals():
+    rng = np.random.default_rng(0)
+    t = load_mod.poisson_arrivals(50.0, 500, rng)
+    assert t.shape == (500,) and (np.diff(t) > 0).all()
+    assert np.mean(np.diff(t)) == pytest.approx(1 / 50.0, rel=0.25)
+    with pytest.raises(ValueError):
+        load_mod.poisson_arrivals(0.0, 3, rng)
+
+
+def test_burst_arrivals():
+    t = load_mod.burst_arrivals(7, burst=3, gap_s=0.5)
+    assert t.tolist() == [0.0, 0.0, 0.0, 0.5, 0.5, 0.5, 1.0]
+
+
+def test_parse_arrivals():
+    assert load_mod.parse_arrivals("poisson:25") == ("poisson", 25.0)
+    assert load_mod.parse_arrivals("trace:/tmp/t.json") == (
+        "trace", "/tmp/t.json")
+    assert load_mod.parse_arrivals("burst:8:0.1") == ("burst", (8, 0.1))
+    assert load_mod.parse_arrivals("burst:8") == ("burst", (8, 0.05))
+    for bad in ("uniform:3", "trace:", "trace"):
+        with pytest.raises(ValueError):
+            load_mod.parse_arrivals(bad)
+
+
+def test_trace_roundtrip(tmp_path):
+    rng = np.random.default_rng(1)
+    spec = load_mod.WorkloadSpec(vocab_size=64, max_prompt=10)
+    trace = load_mod.make_trace(
+        load_mod.poisson_arrivals(100.0, 5, rng),
+        load_mod.synth_requests(spec, 5, rng),
+    )
+    p = tmp_path / "trace.json"
+    load_mod.save_trace(str(p), trace)
+    assert load_mod.load_trace(str(p)) == trace
+
+
+def test_synth_requests_shared_prefixes():
+    rng = np.random.default_rng(2)
+    spec = load_mod.WorkloadSpec(
+        vocab_size=64, prompt_len=(2, 6), out_len=(1, 4), n_system=2,
+        system_len=4, p_shared=1.0, max_prompt=8,
+    )
+    reqs = load_mod.synth_requests(spec, 40, rng)
+    systems = {tuple(p[:4]) for p, _ in reqs}
+    assert len(systems) <= 2  # every prompt opens with a system prompt
+    for p, m in reqs:
+        assert 1 <= len(p) <= 8
+        assert 1 <= m <= 4
+
+
+# --------------------------------------------------------------- replay
+
+def test_replay_matches_batch_run_and_reports(float_model):
+    params, ctx = float_model
+    ecfg = EngineConfig(lanes=2, num_slots=4, page_len=24, prefill_len=8,
+                        policy="chunked", chunk_len=4, prefix_cache=True)
+    rng = np.random.default_rng(3)
+    spec = load_mod.WorkloadSpec(vocab_size=CFG.vocab_size,
+                                 prompt_len=(2, 6), out_len=(2, 4),
+                                 n_system=1, system_len=6, p_shared=0.75,
+                                 max_prompt=16)
+    reqs = load_mod.synth_requests(spec, 6, rng)
+    trace = load_mod.make_trace(load_mod.burst_arrivals(6, 2, 0.01), reqs)
+
+    eng = Engine(params, CFG, ctx, ecfg, obs=Obs(enabled=True))
+    res = load_mod.replay(eng, trace, speed=4.0)
+    assert sorted(res["out"]) == list(range(6))
+
+    # lane isolation: wall-clock admission order cannot change outputs
+    ref = Engine(params, CFG, ctx, ecfg, obs=Obs(enabled=False))
+    for p, m in reqs:
+        ref.add_request(list(p), max_new=m)
+    ref_out = ref.run()
+    assert res["out"] == {rid: ref_out[rid] for rid in res["out"]}
+
+    rep = load_mod.load_report(
+        eng, targets=SLOTargets(ttft_p99_s=60.0, token_p99_s=60.0),
+        wall_s=res["wall_s"],
+    )
+    assert rep["n_requests"] == 6
+    assert rep["tokens_generated"] == sum(len(v) for v in ref_out.values())
+    assert rep["steps"]["prefill"] > 0 and rep["steps"]["decode"] > 0
+    assert rep["ttft_s"]["p99"] > 0 and rep["token_latency_s"]["n"] > 0
+    assert rep["prefix"]["hits"] > 0
+    # generous targets on real samples -> a definite (non-None) verdict
+    assert all(c["ok"] is True for c in rep["slo"]["checks"].values())
+    assert rep["tokens_per_s_wall"] > 0

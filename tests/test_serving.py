@@ -32,6 +32,7 @@ from repro.serving import Engine, EngineConfig
 from repro.serving import pipeline as pipe
 from repro.serving.kvcache import (
     PagedKVCache,
+    PoolExhausted,
     SlotAllocator,
     gather_rows,
     scatter_rows,
@@ -73,11 +74,31 @@ def test_slot_allocator():
     a = SlotAllocator(3)
     got = [a.alloc() for _ in range(3)]
     assert sorted(got) == [0, 1, 2]
-    assert a.alloc() is None and a.num_free == 0
+    # satellite regression: alloc() used to return None on exhaustion,
+    # which flowed straight into the jitted step as a row index
+    assert a.try_alloc() is None and a.num_free == 0
+    with pytest.raises(PoolExhausted):
+        a.alloc()
     a.free(got[1])
     assert a.num_free == 1 and a.alloc() == got[1]
     with pytest.raises(ValueError):
         a.free(99)
+
+
+def test_slot_allocator_refcounts():
+    a = SlotAllocator(2)
+    s = a.alloc()
+    assert a.refcount(s) == 1
+    a.retain(s)
+    assert a.refcount(s) == 2
+    a.release(s)  # one owner left -> still allocated
+    assert a.refcount(s) == 1 and s in a.in_use and a.num_free == 1
+    a.release(s)  # last owner -> back on the free list
+    assert a.refcount(s) == 0 and a.num_free == 2
+    with pytest.raises(ValueError):
+        a.release(s)  # double-free
+    with pytest.raises(ValueError):
+        a.retain(s)  # retain of a free slot
 
 
 def test_paged_pool_gather_scatter_roundtrip():
@@ -300,6 +321,69 @@ def test_decode_priority_policy_runs(float_model):
     _, _, out = _staggered_run(params, ctx, reqs, policy="decode")
     for rid, (prompt, max_new) in enumerate(reqs):
         assert _ref_greedy(params, ctx, prompt, max_new) == out[rid]
+
+
+# ----------------------------------- satellite: admission regression fixes
+
+def test_page_exhaustion_evicts_and_readmits(float_model):
+    """Satellite regression: ``add_request`` used to reject any request
+    with ``len(prompt) + max_new > page_len`` up front, which made the
+    scheduler's "page_exhausted" stop arm dead code. The page budget is
+    runtime state now: the request decodes until its page fills, finishes
+    with reason page_exhausted, and its freed slot re-admits the next
+    waiting request."""
+    params, ctx = float_model
+    ecfg = EngineConfig(lanes=1, num_slots=1, page_len=8, prefill_len=4)
+    eng = Engine(params, CFG, ctx, ecfg)
+    rid = eng.add_request([1, 2, 3, 4], max_new=100)  # page caps it at 4
+    rid2 = eng.add_request([5, 6], max_new=2)  # must wait for the slot
+    out = eng.run()
+    req = eng.requests[rid]
+    # prefill emits one token "for free"; each decode then burns a page
+    # row until pos hits page_len
+    assert len(out[rid]) == ecfg.page_len - 4 + 1
+    assert req.pos == ecfg.page_len
+    span = next(r for r in eng.obs.finished if r.rid == rid)
+    assert span.finish_reason == "page_exhausted"
+    # the evicted request's slot (the only one) was recycled for rid2
+    assert eng.requests[rid2].slot == 0
+    assert len(out[rid2]) == 2
+    assert eng.kv.allocator.num_free == 1
+
+
+def test_prefill_billing_uses_executed_width(float_model):
+    """Satellite regression: prefill was billed at ``len(req.prompt)``,
+    but the engine always executes a fixed ``[1, prefill_len]`` window —
+    a 3-token prompt occupies the pipeline exactly as long as an 8-token
+    one. Occupancy accounting now records the executed width; the span
+    keeps the real prompt length for TTFT attribution."""
+    params, ctx = float_model
+    ecfg = EngineConfig(lanes=1, num_slots=1, page_len=16, prefill_len=8)
+    reps = []
+    for n in (3, 8):  # padded vs exact-width prompt
+        eng = Engine(params, CFG, ctx, ecfg)
+        eng.add_request(list(range(1, n + 1)), max_new=3)
+        eng.run()
+        pre = [e for e in eng.obs.steps if e.kind == "prefill"]
+        assert [e.n_tokens for e in pre] == [ecfg.prefill_len]
+        assert eng.obs.finished[0].n_prompt == n
+        reps.append(eng.trace_report())
+    assert reps[0].pipeline.makespan == pytest.approx(
+        reps[1].pipeline.makespan
+    )
+
+
+def test_static_plan_optional_executed_width():
+    reqs = [Request(rid=0, prompt=[1, 2], max_new=2),
+            Request(rid=1, prompt=[1, 2, 3, 4], max_new=2)]
+    exact = static_batching_plan(reqs, lanes=2)
+    padded = static_batching_plan(reqs, lanes=2, prefill_len=8)
+    assert [e for e in exact if e[0] == "prefill"] == [
+        ("prefill", (0,), 2), ("prefill", (1,), 4)]
+    assert [e for e in padded if e[0] == "prefill"] == [
+        ("prefill", (0,), 8), ("prefill", (1,), 8)]
+    assert [e for e in exact if e[0] == "decode"] == [
+        e for e in padded if e[0] == "decode"]
 
 
 # ------------------------------------------- satellite: paged decode path
